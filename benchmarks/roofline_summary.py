@@ -1,0 +1,41 @@
+"""Roofline summary over dry-run artifacts (the §Roofline data source).
+
+Requires a prior `python -m repro.launch.dryrun` run; prints one CSV row
+per recorded (arch x shape) cell with the three terms and the dominant
+bottleneck. Skips gracefully when no dry-run output exists (CI machines).
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.launch.roofline import load_records
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for mesh in ("singlepod_16x16", "multipod_2x16x16"):
+        for r in load_records(DRYRUN_DIR, mesh):
+            rf = r["roofline"]
+            rows.append((
+                f"roofline.{mesh}.{r['arch']}.{r['shape']}",
+                rf["bound_s"] * 1e6,
+                f"dom={rf['dominant']} frac={rf['roofline_fraction']:.3f} "
+                f"useful={rf['useful_flops_ratio']:.3f} "
+                f"mem_gib={r['memory']['total_per_device_bytes'] / 2**30:.2f}",
+            ))
+    if not rows:
+        rows.append(("roofline.missing", 0.0,
+                     "run `python -m repro.launch.dryrun` first"))
+    return rows
+
+
+def main() -> None:
+    for name, us, derived in run():
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Benchmark orchestrator. One section per paper table/figure:
+
+  table1   — Table 1 (chip power/GOPS/latency/density vs prior works)
+  ablation — compression recipe accuracy (sparsity x bit-width)
+  kernels  — SPE/CMUL kernel correctness + bandwidth math
+  roofline — dry-run roofline summary (when artifacts exist)
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import ablation, kernels, roofline_summary, table1
+
+    print("name,us_per_call,derived")
+    failed = []
+    for mod in (table1, kernels, ablation, roofline_summary):
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.2f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failed.append((mod.__name__, repr(e)))
+            traceback.print_exc()
+    if failed:
+        for name, err in failed:
+            print(f"{name},nan,FAILED {err}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

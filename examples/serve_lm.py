@@ -1,0 +1,66 @@
+"""Batched LM serving demo: slot-engine + weight-only quantized decode.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-8b
+
+Submits a burst of variable-length requests to the slot-based engine
+(continuous batching), then repeats with int8/int4 weight-only
+quantization — the paper's compressed-storage idea applied to the
+memory-bound decode regime — and reports the token agreement between
+precisions.
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import api
+from repro.serve import engine as E
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--requests", type=int, default=5)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = configs.reduced(args.arch)
+    model = api.build_model(cfg, tp=1, max_seq=96)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # --- slot engine with more requests than slots ----------------------
+    eng = E.Engine(model, params, batch_size=args.slots)
+    reqs = []
+    for i in range(args.requests):
+        plen = 4 + (i % 4) * 3  # variable-length prompts
+        reqs.append(E.Request(
+            uid=i,
+            prompt=jax.random.randint(
+                jax.random.PRNGKey(i), (plen,), 0, cfg.vocab
+            ),
+            max_new=args.max_new,
+        ))
+        eng.submit(reqs[-1])
+    eng.run()
+    print(f"engine: {args.requests} requests over {args.slots} slots")
+    for r in reqs:
+        print(f"  req {r.uid} (prompt {r.prompt.shape[0]:2d} tok): "
+              f"{r.output}")
+
+    # --- quantized serving comparison -----------------------------------
+    prompts = jax.random.randint(jax.random.PRNGKey(42), (4, 12), 0,
+                                 cfg.vocab)
+    base = E.generate(model, params, prompts, max_new=args.max_new)
+    for bits in (8, 4):
+        qp = E.quantize_for_serving(params, bits)
+        out = E.generate(model, qp, prompts, max_new=args.max_new)
+        agree = float(jnp.mean((out == base).astype(jnp.float32)))
+        print(f"int{bits} weight-only decode: token agreement vs bf16 "
+              f"= {agree:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""va-cnn — the paper's own workload: 8-layer 1-D FCN VA detector.
+
+Not an LM; selectable via --arch va-cnn in the launchers. The model lives
+in `core.vadetect`; this module only exposes the operating points
+(paper point = 16:8 balanced sparsity + 8-bit quantization, and the
+mixed-precision demo point).
+"""
+
+from repro.core.spe import SPEConfig
+from repro.core.vadetect import VAConfig
+
+# Paper operating point: 50% balanced sparsity, 8-bit weights.
+CONFIG = VAConfig(
+    spe=SPEConfig(bits=8, group_size=16, keep=8, sparse=True,
+                  quantized=True)
+)
+
+# Mixed-precision demo: early layers 8-bit, middle 4-bit, late 8-bit —
+# the CMUL's raison d'être.
+MIXED = VAConfig(
+    spe=SPEConfig(bits=8, group_size=16, keep=8, sparse=True,
+                  quantized=True),
+    layer_bits=(8, 8, 4, 4, 4, 4, 8, 8),
+)
+
+# Dense float baseline (paper's implicit comparison point).
+DENSE = VAConfig(spe=None)
+
+REDUCED = CONFIG  # already CPU-sized (~31k params)

@@ -1,0 +1,20 @@
+"""Core: the paper's contribution as composable JAX modules.
+
+- quant      : mixed-bit-width (8/4/2/1) quantization + bit-plane CMUL math
+- sparsity   : co-design balanced pruning (select-index compressed format)
+- spe        : sparse-quantized linear/conv operators (3 compute paths)
+- vadetect   : the 8-layer 1-D FCN VA detector + 6-segment voting
+- compiler   : trained model -> AcceleratorProgram (chip format + schedule)
+- perf_model : analytic cycle/energy/power model of the 2x4x4x16 chip
+"""
+
+from repro.core import compiler, perf_model, quant, sparsity, spe, vadetect
+
+__all__ = [
+    "compiler",
+    "perf_model",
+    "quant",
+    "sparsity",
+    "spe",
+    "vadetect",
+]

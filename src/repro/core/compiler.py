@@ -1,0 +1,152 @@
+"""The co-design compiler: trained model -> accelerator program.
+
+The paper's full stack is UI → compiler → chip. The compiler's published
+responsibilities:
+
+  1. co-design pruning "to balance workloads and execution times across and
+     within PEs"  → `sparsity.balanced_prune_mask` (verified balanced),
+  2. mixed-precision quantization of weights/activations → `quant`,
+  3. emitting the compressed weight stream + select signals the SPE array
+     consumes, plus the static synchronous schedule (no FIFOs — every PE's
+     work per cycle is known at compile time).
+
+`compile_model` walks a trained parameter pytree, freezes every SPE layer
+into `CompiledLayer` form, checks the balance invariant, and produces an
+`AcceleratorProgram` with a static schedule + the perf-model report for the
+target chip partition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import perf_model, sparsity, vadetect
+from repro.core.spe import CompiledLayer, SPEConfig, compile_layer
+
+
+@dataclasses.dataclass
+class AcceleratorProgram:
+    """Everything the chip needs for inference on one network."""
+
+    layers: dict[str, CompiledLayer]
+    biases: dict[str, jax.Array]
+    layer_meta: list[dict]  # static shapes/strides (the schedule skeleton)
+    report: perf_model.ChipReport
+
+    def weight_hbm_bytes(self) -> int:
+        return sum(l.hbm_bytes() for l in self.layers.values())
+
+    def dense_fp32_bytes(self) -> int:
+        return sum(
+            l.k_dense * l.values_q.shape[1] * 4 for l in self.layers.values()
+        )
+
+    def compression_ratio(self) -> float:
+        return self.dense_fp32_bytes() / max(1, self.weight_hbm_bytes())
+
+
+def compile_model(
+    params: dict, cfg: vadetect.VAConfig = vadetect.VAConfig()
+) -> AcceleratorProgram:
+    """Freeze a trained VA-detector into the chip's program format."""
+    meta = vadetect.layer_shapes(cfg)
+    layers: dict[str, CompiledLayer] = {}
+    biases: dict[str, jax.Array] = {}
+    workloads = []
+    for i, m in enumerate(meta):
+        name = m["name"]
+        spe = cfg.layer_spe(i)
+        w = params[name]["w"]
+        ks, c_in, c_out = w.shape
+        w2 = np.asarray(w).reshape(ks * c_in, c_out)
+        k_flat = w2.shape[0]
+        lcfg = spe if spe is not None else SPEConfig(sparse=False, quantized=False)
+        # pad contraction dim to a whole number of groups (the chip pads
+        # redundant units with zeros — same trick)
+        if lcfg.sparse:
+            pad = (-k_flat) % lcfg.group_size
+            if pad:
+                w2 = np.pad(w2, ((0, pad), (0, 0)))
+        compiled = compile_layer(jnp.asarray(w2), lcfg)
+        # verify the compiler invariant that makes synchronous execution work
+        if lcfg.sparse:
+            mask = sparsity.balanced_prune_mask(
+                jnp.asarray(w2), lcfg.sparsity_cfg
+            )
+            assert sparsity.verify_balance(mask, lcfg.sparsity_cfg), name
+        layers[name] = compiled
+        biases[name] = params[name]["b"]
+        workloads.append(
+            perf_model.LayerWorkload(
+                name=name,
+                c_in=m["c_in"],
+                c_out=m["c_out"],
+                ksize=m["ksize"],
+                t_out=m["t_out"],
+                macs=m["macs"],
+                bits=m["bits"],
+                keep_frac=m["keep_frac"],
+                sparse=m["sparse"],
+            )
+        )
+    report = perf_model.chip_report(workloads)
+    return AcceleratorProgram(
+        layers=layers, biases=biases, layer_meta=meta, report=report
+    )
+
+
+def execute(
+    program: AcceleratorProgram,
+    x: jax.Array,
+    cfg: vadetect.VAConfig = vadetect.VAConfig(),
+    *,
+    path: str = "reference",
+) -> jax.Array:
+    """Run the compiled program (software twin of the chip's execution).
+
+    Uses the im2col-as-matmul dataflow the SPE array implements; `path`
+    selects reference (gather oracle) or kernel (Pallas) execution for the
+    sparse layers. Returns (B, 2) logits.
+    """
+    from repro.core.spe import spe_matmul
+
+    if x.ndim == 2:
+        x = x[..., None]
+    b, t, c = x.shape
+    if c < vadetect.N_INPUT_PAD:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, vadetect.N_INPUT_PAD - c)))
+    h = x
+    n_layers = len(cfg.layers)
+    for i, m in enumerate(program.layer_meta):
+        name = m["name"]
+        layer = program.layers[name]
+        ks, stride = m["ksize"], m["stride"]
+        # im2col patches == the chip's SPad streaming order.
+        # XLA SAME semantics: total pad so t_out = ceil(t/stride).
+        t_in = h.shape[1]
+        t_out = (t_in - 1) // stride + 1
+        pad_total = max((t_out - 1) * stride + ks - t_in, 0)
+        pad_l = pad_total // 2
+        pad_r = pad_total - pad_l
+        xp = jnp.pad(h, ((0, 0), (pad_l, pad_r), (0, 0)))
+        starts = jnp.arange(t_out) * stride
+        patches = jax.vmap(
+            lambda s, xp=xp, ks=ks: jax.lax.dynamic_slice_in_dim(
+                xp, s, ks, axis=1
+            ),
+            out_axes=1,
+        )(starts)  # (B, T_out, ks, C_in)
+        flat = patches.reshape(b, t_out, ks * h.shape[2])
+        k_dense = layer.k_dense
+        if flat.shape[-1] < k_dense:  # compiler padded K to group multiple
+            flat = jnp.pad(
+                flat, ((0, 0), (0, 0), (0, k_dense - flat.shape[-1]))
+            )
+        y = spe_matmul(flat, layer, path=path) + program.biases[name]
+        h = jax.nn.relu(y) if i < n_layers - 1 else y
+    return jnp.mean(h, axis=1)

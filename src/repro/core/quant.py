@@ -1,0 +1,266 @@
+"""Mixed-bit-width quantization — the CMUL arithmetic, as math.
+
+The paper's CMUL (configurable multiplier) supports 8/4/2/1-bit signed
+multiplication by splitting the weight into 1-bit segments, multiplying each
+segment against the (MUXed) input activation, and shift-accumulating the
+partial products:
+
+    w = -w_{B-1} 2^{B-1} + sum_{b<B-1} w_b 2^b          (two's complement)
+    x*w = sum_b (+/- 2^b) * (x * w_b)
+
+On TPU we adapt this as *bit-plane matmul*: each 1-bit weight plane W_b is a
+{0,1} matrix, so
+
+    X @ W = sum_b s_b 2^b (X @ W_b),   s_b = -1 for the sign plane else +1
+
+and every plane product runs on the MXU at full systolic throughput. This
+module provides:
+
+  * symmetric per-channel quantization (quantize / dequantize),
+  * straight-through-estimator fake-quant for QAT,
+  * two's-complement bit-plane decomposition + packed uint8 storage
+    (the storage format the Pallas kernels unpack in VMEM).
+
+All functions are jit-safe and differentiable where meaningful.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+SUPPORTED_BITS = (1, 2, 4, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Per-tensor quantization configuration.
+
+    Attributes:
+      bits: bit width of the stored weights (1, 2, 4 or 8).
+      per_channel: quantize with one scale per output channel (last dim)
+        instead of one scale per tensor.
+      narrow_range: clamp to [-(2^{b-1}-1), 2^{b-1}-1] (symmetric around 0)
+        instead of the full two's-complement range. The chip uses symmetric
+        signed arithmetic, so this defaults to True.
+    """
+
+    bits: int = 8
+    per_channel: bool = True
+    narrow_range: bool = True
+
+    def __post_init__(self):
+        if self.bits not in SUPPORTED_BITS:
+            raise ValueError(
+                f"bits must be one of {SUPPORTED_BITS}, got {self.bits}"
+            )
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1 if self.bits > 1 else 1
+
+    @property
+    def qmin(self) -> int:
+        if self.bits == 1:
+            return -1
+        if self.narrow_range:
+            return -self.qmax
+        return -(1 << (self.bits - 1))
+
+
+def _scale_for(w: jax.Array, cfg: QuantConfig) -> jax.Array:
+    """Symmetric scale: max|w| maps to qmax. Shape () or (1,...,C)."""
+    if cfg.per_channel and w.ndim >= 2:
+        reduce_axes = tuple(range(w.ndim - 1))
+        amax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(w))
+    # Guard fully-zero channels.
+    amax = jnp.maximum(amax, jnp.finfo(w.dtype).tiny)
+    return amax / cfg.qmax
+
+
+def quantize(w: jax.Array, cfg: QuantConfig) -> tuple[jax.Array, jax.Array]:
+    """Quantize to signed integers; returns (q int8, scale float32).
+
+    1-bit is binary-connect style: sign(w) in {-1, +1} with scale mean|w|.
+    """
+    w = w.astype(jnp.float32)
+    if cfg.bits == 1:
+        if cfg.per_channel and w.ndim >= 2:
+            reduce_axes = tuple(range(w.ndim - 1))
+            scale = jnp.mean(jnp.abs(w), axis=reduce_axes, keepdims=True)
+        else:
+            scale = jnp.mean(jnp.abs(w))
+        scale = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
+        q = jnp.where(w >= 0, 1, -1).astype(jnp.int8)
+        return q, scale
+    scale = _scale_for(w, cfg)
+    q = jnp.clip(jnp.round(w / scale), cfg.qmin, cfg.qmax).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def fake_quant(w: jax.Array, bits: int, per_channel: bool) -> jax.Array:
+    """Quantize-dequantize with a straight-through estimator (for QAT).
+
+    bits/per_channel are static (nondiff_argnums) — jittable inside
+    train steps.
+    """
+    cfg = QuantConfig(bits=bits, per_channel=per_channel)
+    q, scale = quantize(w, cfg)
+    return dequantize(q, scale).astype(w.dtype)
+
+
+def _fake_quant_fwd(w, bits, per_channel):
+    return fake_quant(w, bits, per_channel), None
+
+
+def _fake_quant_bwd(bits, per_channel, _, g):
+    # STE: identity gradient w.r.t. w.
+    return (g,)
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Bit-plane (CMUL) decomposition
+# ---------------------------------------------------------------------------
+
+
+def to_bitplanes(q: jax.Array, bits: int) -> jax.Array:
+    """Two's-complement bit planes of a signed integer tensor.
+
+    Returns uint8 array of shape (bits, *q.shape) with values in {0,1}.
+    Plane b is the 2^b coefficient; the top plane is the sign plane and
+    carries weight -2^{bits-1} when recomposing.
+    """
+    if bits == 1:
+        # {-1,+1} stored as a single plane: 1 -> +1, 0 -> -1.
+        return (q > 0).astype(jnp.uint8)[None]
+    u = q.astype(jnp.int32) & ((1 << bits) - 1)  # two's complement bits
+    shifts = jnp.arange(bits, dtype=jnp.int32)
+    planes = (u[None] >> shifts.reshape((bits,) + (1,) * q.ndim)) & 1
+    return planes.astype(jnp.uint8)
+
+
+def from_bitplanes(planes: jax.Array, bits: int) -> jax.Array:
+    """Inverse of `to_bitplanes` — recompose signed integers (int32)."""
+    if bits == 1:
+        return jnp.where(planes[0] > 0, 1, -1).astype(jnp.int32)
+    weights = (2 ** jnp.arange(bits, dtype=jnp.int32)).at[bits - 1].multiply(-1)
+    weights = weights.reshape((bits,) + (1,) * (planes.ndim - 1))
+    return jnp.sum(planes.astype(jnp.int32) * weights, axis=0)
+
+
+def bitserial_matmul_exact(
+    x: jax.Array, q: jax.Array, bits: int
+) -> jax.Array:
+    """CMUL semantics as bit-plane matmuls: x @ q == sum_b s_b 2^b (x @ W_b).
+
+    This is the mathematically-exact reference of the shift-accumulate the
+    chip performs, expressed so every partial product is a dense (MXU-
+    friendly) matmul. `x` float, `q` signed int (from `quantize`).
+    """
+    planes = to_bitplanes(q, bits)  # (bits, K, N)
+    if bits == 1:
+        # plane in {0,1} encodes {-1,+1}: w = 2*p - 1
+        return 2.0 * (x @ planes[0].astype(x.dtype)) - jnp.sum(
+            x, axis=-1, keepdims=True
+        )
+    acc = None
+    for b in range(bits):
+        coeff = -(2.0 ** (bits - 1)) if b == bits - 1 else 2.0**b
+        partial = x @ planes[b].astype(x.dtype)
+        acc = partial * coeff if acc is None else acc + partial * coeff
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Packed storage (what lives in HBM; kernels unpack in VMEM)
+# ---------------------------------------------------------------------------
+
+
+def pack_planes(q: jax.Array, bits: int) -> jax.Array:
+    """Pack a signed int8 weight tensor into uint8 words of bit-planes.
+
+    Output shape: (ceil(bits*K/8), N) for 2-D input (K, N) — i.e. the packed
+    rows hold the two's-complement planes of `bits` consecutive… — concretely
+    we pack along K: each uint8 holds 8/bits consecutive K entries' values.
+    """
+    if q.ndim != 2:
+        raise ValueError("pack_planes expects a 2-D (K, N) weight")
+    k, n = q.shape
+    vals_per_byte = 8 // bits
+    pad = (-k) % vals_per_byte
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0)))
+    if bits == 1:
+        # {-1,+1} -> {0,1} (matches to_bitplanes' 1-bit convention)
+        u = (q > 0).astype(jnp.uint8)
+    else:
+        mask = (1 << bits) - 1
+        u = (q.astype(jnp.int32) & mask).astype(jnp.uint8)
+    u = u.reshape(-1, vals_per_byte, n)
+    shifts = (jnp.arange(vals_per_byte, dtype=jnp.uint8) * bits).reshape(
+        1, -1, 1
+    )
+    packed = jnp.sum(
+        (u.astype(jnp.uint32) << shifts.astype(jnp.uint32)), axis=1
+    ).astype(jnp.uint8)
+    return packed
+
+
+def unpack_planes(packed: jax.Array, bits: int, k: int) -> jax.Array:
+    """Inverse of `pack_planes`: uint8 (K/vpb, N) -> signed int8 (K, N)."""
+    vals_per_byte = 8 // bits
+    mask = (1 << bits) - 1
+    n = packed.shape[-1]
+    shifts = (jnp.arange(vals_per_byte, dtype=jnp.uint32) * bits).reshape(
+        1, -1, 1
+    )
+    u = (packed.astype(jnp.uint32)[:, None, :] >> shifts) & mask
+    u = u.reshape(-1, n)[:k].astype(jnp.int32)
+    if bits == 1:
+        return jnp.where(u > 0, 1, -1).astype(jnp.int8)
+    # sign-extend two's complement
+    sign_bit = 1 << (bits - 1)
+    return jnp.where(u >= sign_bit, u - (1 << bits), u).astype(jnp.int8)
+
+
+def quantized_matmul(
+    x: jax.Array,
+    q: jax.Array,
+    scale: jax.Array,
+    bits: int,
+    *,
+    exact_bitserial: bool = False,
+) -> jax.Array:
+    """x @ dequantize(q): the inference matmul of a CMUL layer.
+
+    With exact_bitserial=True, computes via the bit-plane decomposition
+    (provably identical result; used to cross-check the kernel path).
+    """
+    if exact_bitserial:
+        y = bitserial_matmul_exact(x.astype(jnp.float32), q, bits)
+    else:
+        y = x.astype(jnp.float32) @ q.astype(jnp.float32)
+    scale2d = scale.reshape((1,) * (y.ndim - 1) + (-1,)) if scale.ndim else scale
+    return (y * scale2d).astype(x.dtype)
+
+
+def storage_bits(shape: tuple[int, ...], bits: int) -> int:
+    """Number of bits needed to store a weight tensor at this precision."""
+    n = 1
+    for s in shape:
+        n *= s
+    return n * bits

@@ -1,0 +1,188 @@
+"""Co-design balanced pruning — the SPE's sparse weight format.
+
+The chip's SPE reads *compressed* weights plus per-weight "select signals":
+each PE multiplies a non-zero weight against the activation it selects from a
+16-register window. For that to run with simple synchronous control (single
+shared SPad, no FIFOs), the compiler must prune so every window holds exactly
+the same number of non-zeros — *balanced* sparsity across and within PEs.
+
+We reproduce that as G:2G balanced group pruning along the contraction (K)
+dimension: within every group of `group_size` consecutive K entries of each
+output channel, exactly `keep` survive. At the paper's operating point
+group_size=16, keep=8 (50 % sparsity, 4-bit select signals).
+
+Compressed format (what the Pallas kernel consumes):
+  values : (K_kept, N) float or int8 — surviving weights, group-major order
+  select : (K_kept, N) uint8          — position of each value inside its
+                                        group (0..group_size-1)
+
+Dense K index of compressed row r, channel n:
+  k = (r // keep) * group_size + select[r, n]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """Balanced-group sparsity configuration (the paper: 16/8)."""
+
+    group_size: int = 16
+    keep: int = 8
+
+    def __post_init__(self):
+        if not 0 < self.keep <= self.group_size:
+            raise ValueError(f"invalid keep={self.keep}/{self.group_size}")
+
+    @property
+    def sparsity(self) -> float:
+        return 1.0 - self.keep / self.group_size
+
+    @property
+    def select_bits(self) -> int:
+        return max(1, (self.group_size - 1).bit_length())
+
+
+def _grouped(w: jax.Array, group_size: int) -> jax.Array:
+    """(K, N) -> (K//G, G, N). K must divide; callers pad first."""
+    k, n = w.shape
+    if k % group_size:
+        raise ValueError(f"K={k} not divisible by group_size={group_size}")
+    return w.reshape(k // group_size, group_size, n)
+
+
+def balanced_prune_mask(w: jax.Array, cfg: SparsityConfig) -> jax.Array:
+    """Boolean keep-mask with exactly `keep` True per (group, channel).
+
+    Keeps the top-|w| entries per group — the compiler's workload-balancing
+    constraint: every PE window has identical non-zero count. A trailing
+    partial group is zero-padded for ranking (the chip pads redundant units
+    with zeros), then the mask is sliced back to K.
+    """
+    k = w.shape[0]
+    pad = (-k) % cfg.group_size
+    if pad:
+        wp = jnp.pad(w, ((0, pad), (0, 0)))
+        return balanced_prune_mask(wp, cfg)[:k]
+    g = _grouped(jnp.abs(w), cfg.group_size)  # (Kg, G, N)
+    # top-keep along the G axis
+    order = jnp.argsort(-g, axis=1)  # descending |w|
+    ranks = jnp.argsort(order, axis=1)  # rank of each position
+    mask = ranks < cfg.keep
+    return mask.reshape(w.shape)
+
+
+def apply_prune(w: jax.Array, cfg: SparsityConfig) -> jax.Array:
+    """Dense weights with the balanced mask applied (zeros at pruned slots)."""
+    return jnp.where(balanced_prune_mask(w, cfg), w, 0).astype(w.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def prune_ste(w: jax.Array, group_size: int, keep: int) -> jax.Array:
+    """Masked weights with straight-through gradients (for co-design QAT).
+
+    group_size/keep are static (nondiff_argnums) so the op stays jittable
+    inside train steps.
+    """
+    return apply_prune(w, SparsityConfig(group_size, keep))
+
+
+def _prune_fwd(w, group_size, keep):
+    return prune_ste(w, group_size, keep), None
+
+
+def _prune_bwd(group_size, keep, _, g):
+    return (g,)
+
+
+prune_ste.defvjp(_prune_fwd, _prune_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Compressed (values + select) format
+# ---------------------------------------------------------------------------
+
+
+def compress(
+    w: jax.Array, cfg: SparsityConfig
+) -> tuple[jax.Array, jax.Array]:
+    """Dense (K, N) -> (values (K_kept, N), select uint8 (K_kept, N)).
+
+    Select indices within each group are emitted in ascending dense order so
+    the kernel's gathers are monotone within a window (friendlier to VMEM
+    addressing, and matches the chip's register scan order).
+    """
+    k, n = w.shape
+    g = _grouped(w, cfg.group_size)  # (Kg, G, N)
+    absg = jnp.abs(g)
+    order = jnp.argsort(-absg, axis=1)
+    ranks = jnp.argsort(order, axis=1)
+    keep_mask = ranks < cfg.keep  # (Kg, G, N)
+    # Ascending dense position among kept entries:
+    # sort positions by (not kept, position) and take the first `keep`.
+    pos = jnp.arange(cfg.group_size)[None, :, None]
+    sort_key = jnp.where(keep_mask, pos, cfg.group_size + pos)
+    sel = jnp.argsort(sort_key, axis=1)[:, : cfg.keep, :]  # (Kg, keep, N)
+    vals = jnp.take_along_axis(g, sel, axis=1)  # (Kg, keep, N)
+    values = vals.reshape(-1, n)
+    select = sel.reshape(-1, n).astype(jnp.uint8)
+    return values, select
+
+
+def decompress(
+    values: jax.Array, select: jax.Array, cfg: SparsityConfig, k: int
+) -> jax.Array:
+    """(values, select) -> dense (K, N) with zeros at pruned positions."""
+    kept, n = values.shape
+    kg = k // cfg.group_size
+    vals = values.reshape(kg, cfg.keep, n)
+    sel = select.astype(jnp.int32).reshape(kg, cfg.keep, n)
+    # scatter values into their in-group slots
+    out = jnp.zeros((kg, cfg.group_size, n), values.dtype)
+    gi = jnp.arange(kg)[:, None, None]
+    ni = jnp.arange(n)[None, None, :]
+    out = out.at[gi, sel, ni].set(vals)
+    return out.reshape(k, n)
+
+
+def sparse_matmul_ref(
+    x: jax.Array,
+    values: jax.Array,
+    select: jax.Array,
+    cfg: SparsityConfig,
+) -> jax.Array:
+    """Gather-MAC reference of the SPE: y[...,n] = sum_r v[r,n]*x[...,k(r,n)].
+
+    This is the jnp oracle for the Pallas `nm_spmm` kernel. It materializes
+    the gathered activations (..., K_kept, N) — fine as an oracle, which is
+    exactly why the VMEM-tiled kernel exists for production.
+    """
+    kept, n = values.shape
+    group_of_r = (jnp.arange(kept) // cfg.keep).astype(jnp.int32)
+    dense_k = group_of_r[:, None] * cfg.group_size + select.astype(jnp.int32)
+    x_g = x[..., dense_k]  # (..., K_kept, N)
+    return jnp.sum(x_g * values.astype(x.dtype), axis=-2)
+
+
+def verify_balance(mask: jax.Array, cfg: SparsityConfig) -> bool:
+    """Compiler invariant: every (group, channel) has exactly `keep` nnz."""
+    g = _grouped(mask.astype(jnp.int32), cfg.group_size)
+    counts = g.sum(axis=1)
+    return bool(jnp.all(counts == cfg.keep))
+
+
+def sparsity_schedule(step: int | jax.Array, *, start: int, end: int,
+                      final_keep: int, group_size: int) -> jax.Array:
+    """Gradual pruning schedule: keep-count ramps G -> final_keep over
+    [start, end) (cubic, à la Zhu & Gupta) so co-design training adapts."""
+    t = jnp.clip((step - start) / max(1, end - start), 0.0, 1.0)
+    frac = 1.0 - (1.0 - t) ** 3  # 0 -> 1
+    keep = group_size - frac * (group_size - final_keep)
+    return jnp.ceil(keep).astype(jnp.int32)

@@ -1,0 +1,229 @@
+"""SPE — sparse-quantized linear operators, composable in any model here.
+
+These are the software twins of the chip's Sparse Processing Elements: a
+linear / 1-D conv operator whose weights are (a) balanced-group pruned
+(`core.sparsity`) and (b) mixed-bit-width quantized (`core.quant`), with an
+execution path that mirrors the hardware dataflow:
+
+    HBM:  packed bit-planes of compressed weights + 4-bit select signals
+    VMEM: one activation K-tile (the shared SPad) + unpacked weight tile
+    MXU:  half-size matmul per bit plane, shift-accumulated
+
+Three interchangeable compute paths (all numerically identical):
+  * ``dense``     — dequantized dense matmul (XLA; used for dry-run/backprop)
+  * ``reference`` — gather + bit-serial jnp (oracle semantics)
+  * ``kernel``    — Pallas `nm_spmm` / `bitserial_matmul` (TPU target;
+                    interpret-mode on CPU)
+
+Training uses fake-quant + prune-STE on the dense master weights (QAT /
+co-design pruning); `core.compiler` freezes a trained layer into the
+compressed inference format.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+from repro.core import sparsity as S
+
+ComputePath = Literal["dense", "reference", "kernel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SPEConfig:
+    """Joint sparsity × quantization operating point of one layer."""
+
+    bits: int = 8
+    group_size: int = 16
+    keep: int = 8
+    sparse: bool = True
+    quantized: bool = True
+    path: ComputePath = "dense"
+
+    @property
+    def sparsity_cfg(self) -> S.SparsityConfig:
+        return S.SparsityConfig(self.group_size, self.keep)
+
+    @property
+    def quant_cfg(self) -> Q.QuantConfig:
+        return Q.QuantConfig(bits=self.bits)
+
+
+def spe_train_weight(w: jax.Array, cfg: SPEConfig) -> jax.Array:
+    """QAT/co-design view of a weight: prune-STE then fake-quant (both
+    straight-through). This is what the *training* forward pass uses, so the
+    network learns under the exact inference constraints — the paper's
+    'co-design pruning' + 'hardware-aware quantization'."""
+    if cfg.sparse:
+        w = S.prune_ste(w, cfg.group_size, cfg.keep)
+    if cfg.quantized:
+        w = Q.fake_quant(w, cfg.bits, True)
+    return w
+
+
+@dataclasses.dataclass
+class CompiledLayer:
+    """Frozen inference-format of one SPE layer (what the chip stores)."""
+
+    values_q: jax.Array  # (K_kept, N) int8 — compressed, quantized
+    select: jax.Array  # (K_kept, N) uint8 — in-group select signals
+    scale: jax.Array  # (1, N) f32 per-channel scale
+    packed_planes: jax.Array  # (K_kept*bits/8, N) uint8 — HBM storage
+    bits: int
+    group_size: int
+    keep: int
+    k_dense: int
+    sparse: bool = True
+
+    def hbm_bytes(self) -> int:
+        sel_bits = max(1, (self.group_size - 1).bit_length())
+        return (
+            self.packed_planes.size
+            + (self.select.size * sel_bits + 7) // 8
+            + self.scale.size * 4
+        )
+
+
+def compile_layer(w: jax.Array, cfg: SPEConfig) -> CompiledLayer:
+    """Dense trained weight -> compressed/quantized inference format."""
+    k, n = w.shape
+    scfg = cfg.sparsity_cfg
+    if cfg.sparse:
+        w = S.apply_prune(w, scfg)
+        values, select = S.compress(w, scfg)
+    else:
+        values, select = w, jnp.zeros((k, n), jnp.uint8)
+    q, scale = Q.quantize(values, cfg.quant_cfg)
+    packed = Q.pack_planes(q, cfg.bits)
+    return CompiledLayer(
+        values_q=q,
+        select=select,
+        scale=scale.reshape(1, -1),
+        packed_planes=packed,
+        bits=cfg.bits,
+        group_size=cfg.group_size,
+        keep=cfg.keep,
+        k_dense=k,
+        sparse=cfg.sparse,
+    )
+
+
+def spe_matmul(
+    x: jax.Array, layer: CompiledLayer, *, path: ComputePath = "reference"
+) -> jax.Array:
+    """y = x @ W_sparse_quant — inference execution of one SPE layer."""
+    scfg = S.SparsityConfig(layer.group_size, layer.keep)
+    if not layer.sparse:
+        # dense (uncompressed) storage: plain dequant matmul on all paths
+        y = x.astype(jnp.float32) @ layer.values_q.astype(jnp.float32)
+        return (y * layer.scale).astype(x.dtype)
+    if path == "dense":
+        dense_q = S.decompress(
+            layer.values_q.astype(jnp.float32), layer.select, scfg,
+            layer.k_dense,
+        )
+        return (x.astype(jnp.float32) @ dense_q * layer.scale).astype(x.dtype)
+    if path == "reference":
+        values = layer.values_q.astype(jnp.float32)
+        y = S.sparse_matmul_ref(x.astype(jnp.float32), values, layer.select,
+                                scfg)
+        return (y * layer.scale).astype(x.dtype)
+    if path == "kernel":
+        from repro.kernels import ops as kops  # lazy: pallas import
+
+        return kops.nm_spmm(
+            x, layer.values_q, layer.select, layer.scale,
+            group_size=layer.group_size, keep=layer.keep,
+        ).astype(x.dtype)
+    raise ValueError(f"unknown path {path!r}")
+
+
+# ---------------------------------------------------------------------------
+# Layer modules (init/apply pairs, pure pytrees)
+# ---------------------------------------------------------------------------
+
+
+def linear_init(key: jax.Array, k: int, n: int, dtype=jnp.float32) -> dict:
+    scale = (2.0 / (k + n)) ** 0.5
+    return {
+        "w": jax.random.normal(key, (k, n), dtype) * scale,
+        "b": jnp.zeros((n,), dtype),
+    }
+
+
+def linear_apply(params: dict, x: jax.Array, cfg: Optional[SPEConfig]) -> jax.Array:
+    w = params["w"]
+    if cfg is not None:
+        w = spe_train_weight(w, cfg)
+    return x @ w + params["b"]
+
+
+def conv1d_init(
+    key: jax.Array, c_in: int, c_out: int, ksize: int, dtype=jnp.float32
+) -> dict:
+    fan = c_in * ksize
+    return {
+        "w": jax.random.normal(key, (ksize, c_in, c_out), dtype)
+        * (2.0 / fan) ** 0.5,
+        "b": jnp.zeros((c_out,), dtype),
+    }
+
+
+def conv1d_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: Optional[SPEConfig],
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+) -> jax.Array:
+    """1-D convolution (B, T, C_in) -> (B, T', C_out).
+
+    The SPE treats a KxC_in conv window as a flattened contraction dim, so
+    prune/quant apply to the flattened (ksize*c_in, c_out) weight — matching
+    how the chip streams ifmap data channel-major through the SPad.
+    """
+    w, b = params["w"], params["b"]
+    ks, c_in, c_out = w.shape
+    if cfg is not None:
+        w2 = spe_train_weight(w.reshape(ks * c_in, c_out), cfg)
+        w = w2.reshape(ks, c_in, c_out)
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride,),
+        padding=padding,
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    )
+    return y + b
+
+
+def conv1d_as_matmul(
+    params: dict, x: jax.Array, *, stride: int = 1
+) -> jax.Array:
+    """im2col view of conv1d — the form the chip (and our kernel) executes.
+
+    SAME padding. Returns identical values to `conv1d_apply` (fp32).
+    """
+    w, b = params["w"], params["b"]
+    ks, c_in, c_out = w.shape
+    bsz, t, _ = x.shape
+    # XLA SAME semantics: total pad so t_out = ceil(t/stride), left-biased
+    t_out = (t - 1) // stride + 1
+    pad_total = max((t_out - 1) * stride + ks - t, 0)
+    pad_l = pad_total // 2
+    pad_r = pad_total - pad_l
+    xp = jnp.pad(x, ((0, 0), (pad_l, pad_r), (0, 0)))
+    starts = jnp.arange(t_out) * stride
+    patches = jax.vmap(
+        lambda s: jax.lax.dynamic_slice_in_dim(xp, s, ks, axis=1),
+        out_axes=1,
+    )(starts)  # (B, T_out, ks, C_in)
+    patches = patches.reshape(bsz, t_out, ks * c_in)
+    y = patches @ w.reshape(ks * c_in, c_out) + b
+    return y

@@ -1,0 +1,5 @@
+"""Data substrate: synthetic IEGM pipeline + LM token pipeline."""
+
+from repro.data import iegm, lm
+
+__all__ = ["iegm", "lm"]

@@ -1,0 +1,214 @@
+"""Synthetic IEGM data pipeline matching the paper's acquisition spec.
+
+The paper's dataset (SingularMedical, single-lead RVA-Bi intracardiac
+electrograms) is proprietary; we synthesize morphologically-plausible
+recordings with the same front-end spec so the *pipeline* — 512 samples
+@ 250 Hz, 15–55 Hz band-pass, 6-segment majority vote — is reproduced
+end-to-end and the accuracy numbers are honestly labelled "synthetic".
+
+Classes:
+  0  non-VA : normal sinus rhythm (NSR) — periodic sharp ventricular
+              depolarizations at 60–100 bpm + baseline wander + noise.
+  1  VA     : ventricular tachycardia (VT: fast monomorphic, 150–250 bpm)
+              or ventricular fibrillation (VF: disorganized, drifting
+              frequency content 3–8 Hz, no discrete beats).
+
+The band-pass filter is a windowed-sinc FIR (no scipy dependency); the
+same filter is applied to every class, as the front-end hardware would.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SAMPLE_RATE_HZ = 250.0
+RECORD_LEN = 512
+BAND_LO_HZ = 15.0
+BAND_HI_HZ = 55.0
+VOTE_SEGMENTS = 6
+
+
+# ---------------------------------------------------------------------------
+# 15–55 Hz FIR band-pass (windowed sinc, Hamming), as a fixed conv.
+# ---------------------------------------------------------------------------
+
+
+def bandpass_taps(
+    num_taps: int = 101,
+    lo_hz: float = BAND_LO_HZ,
+    hi_hz: float = BAND_HI_HZ,
+    fs: float = SAMPLE_RATE_HZ,
+) -> np.ndarray:
+    """Linear-phase FIR band-pass taps (difference of low-passes)."""
+    assert num_taps % 2 == 1, "odd taps for zero-phase-delay symmetry"
+    m = np.arange(num_taps) - (num_taps - 1) / 2
+    def lp(fc):
+        h = np.sinc(2 * fc / fs * m) * (2 * fc / fs)
+        return h * np.hamming(num_taps)
+    taps = lp(hi_hz) - lp(lo_hz)
+    return taps.astype(np.float32)
+
+
+_TAPS = jnp.asarray(bandpass_taps())
+
+
+def bandpass(x: jax.Array) -> jax.Array:
+    """(..., T) -> (..., T) zero-padded 'same' FIR filtering."""
+    lead = x.shape[:-1]
+    t = x.shape[-1]
+    xf = x.reshape(-1, 1, t)  # (B, C=1, T)
+    y = jax.lax.conv_general_dilated(
+        xf,
+        _TAPS.reshape(1, 1, -1),
+        window_strides=(1,),
+        padding="SAME",
+        dimension_numbers=("NCH", "IOH", "NCH"),
+    )
+    return y.reshape(*lead, t)
+
+
+def filter_response_db(freq_hz: np.ndarray) -> np.ndarray:
+    """|H(f)| in dB for test assertions on the pass/stop bands."""
+    taps = bandpass_taps()
+    w = 2j * np.pi * freq_hz[:, None] / SAMPLE_RATE_HZ
+    h = np.exp(-w * np.arange(len(taps))[None, :]) @ taps
+    return 20 * np.log10(np.maximum(np.abs(h), 1e-12))
+
+
+# ---------------------------------------------------------------------------
+# Morphology synthesis
+# ---------------------------------------------------------------------------
+
+
+def _nsr(key: jax.Array, n: int) -> jax.Array:
+    """Normal sinus rhythm: discrete beats at 60–100 bpm."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    t = jnp.arange(RECORD_LEN) / SAMPLE_RATE_HZ  # (T,)
+    bpm = jax.random.uniform(k1, (n, 1), minval=60.0, maxval=100.0)
+    phase = jax.random.uniform(k2, (n, 1), minval=0.0, maxval=1.0)
+    beat_phase = (t[None, :] * bpm / 60.0 + phase) % 1.0
+    # sharp biphasic depolarization spike (narrow gaussian derivative)
+    width = jax.random.uniform(k3, (n, 1), minval=0.012, maxval=0.022)
+    z = (beat_phase - 0.5) / width
+    spike = -z * jnp.exp(-0.5 * z * z)  # biphasic
+    amp = jax.random.uniform(k4, (n, 1), minval=0.8, maxval=1.4)
+    return amp * spike
+
+
+def _vt(key: jax.Array, n: int) -> jax.Array:
+    """Monomorphic VT: fast (150–250 bpm) wide-complex oscillation."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    t = jnp.arange(RECORD_LEN) / SAMPLE_RATE_HZ
+    bpm = jax.random.uniform(k1, (n, 1), minval=150.0, maxval=250.0)
+    phase = jax.random.uniform(k2, (n, 1), minval=0.0, maxval=1.0)
+    f = bpm / 60.0
+    base = jnp.sin(2 * jnp.pi * (f * t[None, :] + phase))
+    # wide complexes: add 2nd harmonic w/ fixed relation (monomorphic)
+    amp = jax.random.uniform(k3, (n, 1), minval=0.9, maxval=1.5)
+    return amp * (base + 0.45 * jnp.sin(4 * jnp.pi * (f * t[None, :] + phase)))
+
+
+def _vf(key: jax.Array, n: int) -> jax.Array:
+    """VF: disorganized — sum of drifting 3–8 Hz components, random walk."""
+    keys = jax.random.split(key, 5)
+    t = jnp.arange(RECORD_LEN) / SAMPLE_RATE_HZ
+    out = jnp.zeros((n, RECORD_LEN))
+    for i in range(3):
+        kf, ka = jax.random.split(keys[i], 2)
+        f0 = jax.random.uniform(kf, (n, 1), minval=3.0, maxval=8.0)
+        drift = jnp.cumsum(
+            jax.random.normal(ka, (n, RECORD_LEN)) * 0.4, axis=1
+        ) / SAMPLE_RATE_HZ
+        amp = jax.random.uniform(keys[3], (n, 1), minval=0.3, maxval=0.8)
+        out = out + amp * jnp.sin(2 * jnp.pi * (f0 * t[None, :] + drift))
+    return out
+
+
+def _noise(key: jax.Array, n: int) -> jax.Array:
+    k1, k2 = jax.random.split(key)
+    white = jax.random.normal(k1, (n, RECORD_LEN)) * 0.08
+    # baseline wander (respiration ~0.3 Hz) — removed by the band-pass
+    t = jnp.arange(RECORD_LEN) / SAMPLE_RATE_HZ
+    wander_f = jax.random.uniform(k2, (n, 1), minval=0.15, maxval=0.45)
+    wander = 0.6 * jnp.sin(2 * jnp.pi * wander_f * t[None, :])
+    return white + wander
+
+
+def synth_batch(
+    key: jax.Array, batch: int, *, filtered: bool = True
+) -> dict[str, jax.Array]:
+    """Balanced batch of {signal (B, 512) f32, label (B,) i32}."""
+    k_lab, k_nsr, k_vt, k_vf, k_noise, k_mix = jax.random.split(key, 6)
+    labels = jax.random.bernoulli(k_lab, 0.5, (batch,)).astype(jnp.int32)
+    nsr = _nsr(k_nsr, batch)
+    vt = _vt(k_vt, batch)
+    vf = _vf(k_vf, batch)
+    is_vf = jax.random.bernoulli(k_mix, 0.5, (batch, 1))
+    va = jnp.where(is_vf, vf, vt)
+    sig = jnp.where(labels[:, None] == 1, va, nsr) + _noise(k_noise, batch)
+    if filtered:
+        sig = bandpass(sig)
+    # per-record normalization (front-end AGC)
+    sig = sig / (jnp.std(sig, axis=1, keepdims=True) + 1e-6)
+    return {"signal": sig.astype(jnp.float32), "label": labels}
+
+
+def synth_diagnosis_batch(
+    key: jax.Array, batch: int, *, segments: int = VOTE_SEGMENTS
+) -> dict[str, jax.Array]:
+    """Per-patient batches of `segments` recordings sharing one diagnosis."""
+    k_lab, k_sig = jax.random.split(key)
+    labels = jax.random.bernoulli(k_lab, 0.5, (batch,)).astype(jnp.int32)
+    seg_labels = jnp.repeat(labels, segments)
+    flat = synth_batch(k_sig, batch * segments)
+    # overwrite labels so all segments of one patient agree
+    k_nsr, k_vt, k_vf, k_noise, k_mix = jax.random.split(k_sig, 5)
+    nsr = _nsr(k_nsr, batch * segments)
+    vt = _vt(k_vt, batch * segments)
+    vf = _vf(k_vf, batch * segments)
+    is_vf = jax.random.bernoulli(k_mix, 0.5, (batch * segments, 1))
+    va = jnp.where(is_vf, vf, vt)
+    sig = jnp.where(seg_labels[:, None] == 1, va, nsr) + _noise(
+        k_noise, batch * segments
+    )
+    sig = bandpass(sig)
+    sig = sig / (jnp.std(sig, axis=1, keepdims=True) + 1e-6)
+    return {
+        "signal": sig.reshape(batch, segments, RECORD_LEN).astype(
+            jnp.float32
+        ),
+        "label": labels,
+    }
+
+
+@dataclasses.dataclass
+class IEGMStream:
+    """Deterministic, host-shardable stream of training batches.
+
+    Sharding is by folding (host_id, step) into the key — every host
+    draws a disjoint, reproducible slice; restart at step k regenerates
+    the identical batch (the checkpoint/restart contract).
+    """
+
+    batch: int
+    seed: int = 0
+    host_id: int = 0
+    num_hosts: int = 1
+
+    def batch_at(self, step: int) -> dict[str, jax.Array]:
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), self.host_id),
+            step,
+        )
+        return synth_batch(key, self.batch)
+
+    def __iter__(self) -> Iterator[dict[str, jax.Array]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- nm_spmm        : the SPE — balanced select-index sparse matmul
+- bitserial      : the CMUL — bit-plane (8/4/2/1-bit) matmul
+- quant_matmul   : packed dequant matmul (production sub-byte path)
+- sparse_conv1d  : fused im2col + SPE matmul (one VA-net layer)
+
+`ops` holds the public wrappers (batch handling, padding, interpret
+dispatch); `ref` the pure-jnp oracles every kernel is tested against.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

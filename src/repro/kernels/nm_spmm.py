@@ -1,0 +1,106 @@
+"""nm_spmm — the SPE array as a Pallas TPU kernel.
+
+Balanced select-index sparse matmul:
+
+    y[m, n] = sum_r values[r, n] * x[m, (r // keep) * G + select[r, n]]
+
+HBM traffic is the *compressed* stream (values + 4-bit-class select
+signals), exactly like the chip: the SPE's "select one of 16 registers"
+becomes, per VMEM tile, a one-hot in-group scatter that rebuilds a dense
+weight tile which the MXU then consumes at full systolic throughput.
+
+TPU adaptation note (vs. the ASIC): the MXU has no per-lane zero-skip, so
+the win here is *bandwidth* (half the weight bytes moved), not MACs. The
+decompression is gather-free (VPU compare+madd, ~keep/G of the matmul's
+FLOPs). See DESIGN.md §2 for the mapping table.
+
+Tiling (defaults, f32 worst case):
+    x tile      (bm=128, bk=256)           128 KB
+    values/sel  (bkk=128, bn=128) int8+u8   32 KB
+    dense w     (bk=256, bn=128)           128 KB
+    one-hot tmp (16 groups, 16, 8, 128)      1 MB transient
+    out         (bm=128, bn=128)            64 KB
+  comfortably inside the ~16 MB VMEM of a v5e core; MXU dims all 128-mult.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels._common import decompress_tile
+
+
+def _kernel(
+    x_ref,  # (bm, bk) float
+    v_ref,  # (bkk, bn) int8/float
+    s_ref,  # (bkk, bn) uint8
+    scale_ref,  # (1, bn) f32
+    o_ref,  # (bm, bn) f32
+    *,
+    group_size: int,
+    keep: int,
+    nk: int,
+):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = decompress_tile(v_ref[...], s_ref[...], group_size, keep)  # (bk, bn)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _scale():
+        o_ref[...] *= scale_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "group_size", "keep", "block_m", "block_n", "block_groups",
+        "interpret",
+    ),
+)
+def nm_spmm_2d(
+    x: jax.Array,  # (M, K) — K a multiple of group_size, groups-padded
+    values: jax.Array,  # (Kk, N) int8 or float
+    select: jax.Array,  # (Kk, N) uint8
+    scale: jax.Array,  # (1, N) f32 (pass ones for unquantized)
+    *,
+    group_size: int,
+    keep: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_groups: int = 16,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x.shape
+    kk, n = values.shape
+    assert k % group_size == 0 and kk == (k // group_size) * keep, (
+        f"K={k} / Kk={kk} inconsistent with {keep}:{group_size} sparsity"
+    )
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    gpb = min(block_groups, k // group_size)
+    bk = gpb * group_size
+    bkk = gpb * keep
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, group_size=group_size, keep=keep, nk=grid[2]
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk_: (i, kk_)),
+            pl.BlockSpec((bkk, bn), lambda i, j, kk_: (kk_, j)),
+            pl.BlockSpec((bkk, bn), lambda i, j, kk_: (kk_, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk_: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk_: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, values, select, scale)

@@ -1,0 +1,73 @@
+"""quant_matmul — packed sub-byte dequant matmul (the production LM path).
+
+Same storage format as `bitserial` (packed two's-complement planes from
+`quant.pack_planes`) but a single MXU pass per K-tile: unpack -> sign-extend
+-> one matmul. This is what the serving engine uses for weight-quantized
+projections: HBM moves bits/8 bytes per weight (the memory-roofline win on
+decode shapes), the MXU runs one dense pass.
+
+`bitserial_matmul` (plane-per-pass) and this kernel are numerically
+identical; tests assert both against the same oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels._common import unpack_tile
+
+
+def _kernel(x_ref, p_ref, scale_ref, o_ref, *, bits: int, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = unpack_tile(p_ref[...], bits).astype(jnp.float32)  # (bk, bn)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _scale():
+        o_ref[...] *= scale_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "block_m", "block_n", "block_k", "interpret"),
+)
+def quant_matmul_2d(
+    x: jax.Array,  # (M, K)
+    packed: jax.Array,  # (K * bits / 8, N) uint8
+    scale: jax.Array,  # (1, N) f32
+    *,
+    bits: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x.shape
+    kp, n = packed.shape
+    vpb = 8 // bits
+    assert kp * vpb == k, f"packed rows {kp} x {vpb} != K={k}"
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+    assert bk % vpb == 0 and k % bk == 0, (bk, vpb, k)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // vpb, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, packed, scale)

@@ -1,0 +1,124 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the *semantic definition* of its kernel: small, obviously
+correct, and memory-naive. Kernel tests sweep shapes/dtypes and
+``assert_allclose`` kernel-vs-oracle; the oracles themselves are validated
+against the ``core.quant`` / ``core.sparsity`` math in the core tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+from repro.core import sparsity as S
+
+
+# ---------------------------------------------------------------------------
+# nm_spmm — balanced select-index sparse matmul (the SPE)
+# ---------------------------------------------------------------------------
+
+
+def nm_spmm_ref(
+    x: jax.Array,
+    values: jax.Array,
+    select: jax.Array,
+    scale: jax.Array | None,
+    *,
+    group_size: int,
+    keep: int,
+) -> jax.Array:
+    """y[..., n] = sum_r values[r, n] * x[..., (r//keep)*G + select[r, n]].
+
+    ``values`` may be int8 (quantized, with per-channel ``scale``) or float
+    (``scale=None``). Output is f32.
+    """
+    cfg = S.SparsityConfig(group_size, keep)
+    y = S.sparse_matmul_ref(
+        x.astype(jnp.float32), values.astype(jnp.float32), select, cfg
+    )
+    if scale is not None:
+        y = y * scale.reshape((1,) * (y.ndim - 1) + (-1,))
+    return y
+
+
+# ---------------------------------------------------------------------------
+# bitserial_matmul — CMUL bit-plane matmul over packed planes
+# ---------------------------------------------------------------------------
+
+
+def bitserial_matmul_ref(
+    x: jax.Array,
+    packed: jax.Array,
+    scale: jax.Array,
+    *,
+    bits: int,
+    k: int,
+) -> jax.Array:
+    """y = x @ dequantize(unpack(packed)) — defined via the exact bit-serial
+    shift-accumulate (`quant.bitserial_matmul_exact`), i.e. the CMUL's own
+    arithmetic. Output f32."""
+    q = Q.unpack_planes(packed, bits, k)
+    y = Q.bitserial_matmul_exact(x.astype(jnp.float32), q, bits)
+    return y * scale.reshape((1,) * (y.ndim - 1) + (-1,))
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul — packed int8/int4/int2/int1 dense dequant matmul (LM path)
+# ---------------------------------------------------------------------------
+
+
+def quant_matmul_ref(
+    x: jax.Array,
+    packed: jax.Array,
+    scale: jax.Array,
+    *,
+    bits: int,
+    k: int,
+) -> jax.Array:
+    """y = x @ (unpack(packed) * scale). Output f32."""
+    q = Q.unpack_planes(packed, bits, k).astype(jnp.float32)
+    y = x.astype(jnp.float32) @ q
+    return y * scale.reshape((1,) * (y.ndim - 1) + (-1,))
+
+
+# ---------------------------------------------------------------------------
+# sparse_conv1d — fused im2col + SPE matmul (one VA-net layer)
+# ---------------------------------------------------------------------------
+
+
+def sparse_conv1d_ref(
+    x: jax.Array,
+    values: jax.Array,
+    select: jax.Array,
+    scale: jax.Array | None,
+    *,
+    ksize: int,
+    stride: int,
+    group_size: int,
+    keep: int,
+) -> jax.Array:
+    """(B, T, C) -> (B, T_out, N) sparse-quantized conv, SAME padding.
+
+    The contraction dim is the flattened (ksize * C) window, zero-padded to
+    a whole number of sparsity groups — exactly what `core.compiler` emits.
+    """
+    b, t, c = x.shape
+    t_out = (t - 1) // stride + 1
+    pad_total = max((t_out - 1) * stride + ksize - t, 0)
+    pad_l = pad_total // 2
+    xp = jnp.pad(x, ((0, 0), (pad_l, pad_total - pad_l), (0, 0)))
+    starts = jnp.arange(t_out) * stride
+    patches = jax.vmap(
+        lambda s: jax.lax.dynamic_slice_in_dim(xp, s, ksize, axis=1),
+        out_axes=1,
+    )(starts).reshape(b, t_out, ksize * c)
+    k_dense = (values.shape[0] // keep) * group_size
+    if patches.shape[-1] < k_dense:
+        patches = jnp.pad(
+            patches, ((0, 0), (0, 0), (0, k_dense - patches.shape[-1]))
+        )
+    return nm_spmm_ref(
+        patches, values, select, scale, group_size=group_size, keep=keep
+    )

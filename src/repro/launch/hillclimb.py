@@ -1,0 +1,97 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: re-lower one cell under a named variant and
+print the roofline-term deltas vs the recorded baseline.
+
+    python -m repro.launch.hillclimb --arch qwen3-8b --shape decode_32k \\
+        --variant kv8 --tag _kv8
+
+Variants are (cfg overrides, serve_quant_bits) pairs; results are written
+next to the baselines with the tag suffix so EXPERIMENTS.md §Perf can
+cite both.
+"""
+
+import argparse
+import json
+
+from repro.launch.dryrun import run_cell
+
+VARIANTS = {
+    # bf16 blockwise scores/softmax (halves score-tensor traffic;
+    # accumulators stay f32) — applied via attention.score_dtype
+    "smbf16": dict(score_bf16=True),
+    # paper-faithful transfer: packed int8/int4 weights (CMUL storage)
+    "w8": dict(serve_quant_bits=8),
+    "w4": dict(serve_quant_bits=4),
+    # beyond-paper: int8 KV cache (quantized storage on the decode-
+    # dominant tensor)
+    "kv8": dict(overrides={"kv_quant_bits": 8}),
+    "kv8w8": dict(serve_quant_bits=8, overrides={"kv_quant_bits": 8}),
+    # MoE expert sharding: replicate experts over data (kill the
+    # D-contraction all-reduce)
+    "moe_tp": dict(overrides={"moe_shard": "tp_only"}),
+    # chunked CE (live-logits memory)
+    "ce512": dict(overrides={"loss_chunk": 512}),
+    "ce512_moe_tp": dict(
+        overrides={"loss_chunk": 512, "moe_shard": "tp_only"}
+    ),
+    # attention block-size sweep
+    "blk1024": dict(overrides={"attn_block": 1024}),
+    "blk2048": dict(overrides={"attn_block": 2048}),
+    # microbatching sweep
+    "mb2": dict(overrides={"train_microbatches": 2}),
+    "mb4": dict(overrides={"train_microbatches": 4}),
+    "mb8": dict(overrides={"train_microbatches": 8}),
+    # SPE QAT knobs on the train path (paper technique in training)
+    "spe8": dict(spe_bits=8),
+    "spe8s": dict(spe_bits=8, spe_sparse=True),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True, choices=sorted(VARIANTS))
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    v = VARIANTS[args.variant]
+    ctx = None
+    if v.get("score_bf16"):
+        import contextlib
+
+        import jax.numpy as jnp
+
+        from repro.models import attention as _A
+
+        ctx = _A.score_dtype(jnp.bfloat16)
+        ctx.__enter__()
+    rec = run_cell(
+        args.arch, args.shape, args.mesh == "multi", args.out,
+        spe_bits=v.get("spe_bits"), spe_sparse=v.get("spe_sparse", False),
+        serve_quant_bits=v.get("serve_quant_bits"),
+        overrides=v.get("overrides"), tag=f"_{args.variant}",
+    )
+    # print the before/after against the untagged baseline
+    mesh_name = (
+        "multipod_2x16x16" if args.mesh == "multi" else "singlepod_16x16"
+    )
+    base_fn = os.path.join(
+        args.out, mesh_name, f"{rec['arch']}__{args.shape}.json"
+    )
+    if os.path.exists(base_fn):
+        base = json.load(open(base_fn))
+        b, n = base["roofline"], rec["roofline"]
+        print(f"\n{'term':<16}{'baseline':>12}{'variant':>12}{'delta':>9}")
+        for key in ("t_compute_s", "t_memory_s", "t_collective_s",
+                    "bound_s", "roofline_fraction"):
+            bv, nv = b[key], n[key]
+            d = (nv - bv) / bv * 100 if bv else float("nan")
+            print(f"{key:<16}{bv:>12.4g}{nv:>12.4g}{d:>8.1f}%")
+
+
+if __name__ == "__main__":
+    main()

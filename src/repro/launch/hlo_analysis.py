@@ -1,0 +1,155 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline term extraction.
+
+`cost_analysis()` gives per-device FLOPs / bytes-accessed but nothing
+about collectives, so we parse the optimized HLO text
+(`compiled.as_text()`) and classify every collective op.
+
+Byte convention (per device, per executed step):
+  all-reduce          result_bytes            (ring sends ~2x(n-1)/n ~ 2x;
+                                               we count operand size per
+                                               the assignment and apply
+                                               ring factors in roofline)
+  all-gather          result_bytes / group    (operand = one shard)
+  reduce-scatter      result_bytes * group    (operand = full tensor)
+  all-to-all          result_bytes
+  collective-permute  result_bytes
+
+'-start'/'-done' async pairs are counted once (on '-start').
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute|ragged-all-to-all)"
+    r"(-start)?\b"
+)
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict
+    count_by_op: dict
+    total_bytes: int
+
+    def to_dict(self) -> dict:
+        return {
+            "bytes_by_op": dict(self.bytes_by_op),
+            "count_by_op": dict(self.count_by_op),
+            "total_bytes": int(self.total_bytes),
+        }
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    bytes_by_op: dict = defaultdict(int)
+    count_by_op: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        # result shape(s): everything before the op token on the lhs
+        lhs = line[: m.start()] + line[m.start(): m.end()]
+        result_bytes = _shape_bytes(line[: m.end()])
+        g = _group_size(line)
+        if op == "all-gather":
+            b = result_bytes // max(g, 1)
+        elif op == "reduce-scatter":
+            b = result_bytes * g
+        else:
+            b = result_bytes
+        bytes_by_op[op] += b
+        count_by_op[op] += 1
+    return CollectiveStats(
+        bytes_by_op=dict(bytes_by_op),
+        count_by_op=dict(count_by_op),
+        total_bytes=sum(bytes_by_op.values()),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (TPU v5e single-chip constants)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+
+def roofline_terms(
+    *,
+    per_device_flops: float,
+    per_device_bytes: float,
+    per_device_collective_bytes: float,
+    model_flops_total: float,
+    n_devices: int,
+    per_device_arg_bytes: float = 0.0,
+) -> dict:
+    """The three roofline terms in seconds (per step, per device — the
+    SPMD program is identical on every device, so per-device == critical
+    path under perfect overlap).
+
+    roofline_fraction = ideal time / binding term, where ideal is the
+    LARGER of (a) useful MODEL_FLOPS at peak and (b) reading every live
+    input byte (params + caches) exactly once at HBM bandwidth — (b) is
+    the honest floor for memory-bound decode, where MODEL_FLOPS alone
+    would make any KV-dominated step look like 0."""
+    t_compute = per_device_flops / PEAK_FLOPS_BF16
+    t_memory = per_device_bytes / HBM_BW
+    t_coll = per_device_collective_bytes / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory),
+        ("collective", t_coll), key=lambda kv: kv[1],
+    )[0]
+    bound = max(t_compute, t_memory, t_coll)
+    useful = model_flops_total / max(per_device_flops * n_devices, 1.0)
+    t_useful = (model_flops_total / n_devices) / PEAK_FLOPS_BF16
+    t_ideal = max(t_useful, per_device_arg_bytes / HBM_BW)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": bound,
+        "model_flops_total": model_flops_total,
+        "hlo_flops_total": per_device_flops * n_devices,
+        "useful_flops_ratio": useful,
+        "t_ideal_s": t_ideal,
+        "roofline_fraction": (t_ideal / bound) if bound > 0 else 0.0,
+    }

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state. The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import so `jax.make_mesh` can build these meshes on the CPU container;
+on real hardware the same call lays the mesh over the pod slices.
+
+Axes:
+  pod    — 2 pods (multi-pod only): pure DP; cross-pod traffic is DCN,
+           which is where `dist.compression` applies.
+  data   — 16-way in-pod: DP + FSDP (params/optimizer sharded, ZeRO-3).
+  model  — 16-way in-pod: TP (heads / ffn columns / vocab) and the MoE
+           expert-hidden dim. Pure-DP profiles (whisper-tiny) fold this
+           axis into data parallelism instead.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_smoke_mesh(n_data: int = 1, n_model: int = 1) -> jax.sharding.Mesh:
+    """Tiny mesh over however many real devices the host has (tests)."""
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

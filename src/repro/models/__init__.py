@@ -1,0 +1,23 @@
+"""LM substrate: attention, MoE, RWKV-6, RG-LRU, whisper, unified stack."""
+
+from repro.models import (
+    api,
+    attention,
+    layers,
+    moe,
+    rglru,
+    rwkv6,
+    transformer,
+    whisper,
+)
+
+__all__ = [
+    "api",
+    "attention",
+    "layers",
+    "moe",
+    "rglru",
+    "rwkv6",
+    "transformer",
+    "whisper",
+]

@@ -1,0 +1,119 @@
+"""Unified model API: every architecture behind one interface.
+
+`build_model(cfg, tp)` returns a `Model` whose five entry points are what
+the trainer, server, and dry-run lower:
+
+    init(key)                      -> params
+    loss(params, batch)            -> (loss, metrics)       [train_step]
+    prefill(params, **inputs)      -> (last_logits, cache)  [prefill cell]
+    decode_step(params, cache, token, pos) -> (logits, cache) [decode cell]
+    init_cache(batch, max_seq)     -> cache pytree
+
+`input_specs(cfg, shape_cell, tp)` produces ShapeDtypeStruct stand-ins for
+every entry point's inputs (weak-type-correct, no allocation) — the
+dry-run lowers against these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import transformer as T
+from repro.models import whisper as W
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    dims: T.Dims
+    max_seq: int
+    init: Callable[[jax.Array], Any]
+    loss: Callable[..., tuple[jax.Array, dict]]
+    prefill: Callable[..., tuple[jax.Array, Any]]
+    decode_step: Callable[..., tuple[jax.Array, Any]]
+    init_cache: Callable[[int], Any]
+
+
+def build_model(cfg: ArchConfig, *, tp: int = 1, max_seq: int = 4096) -> Model:
+    cfg.validate()
+    dims = T.Dims.create(cfg, tp)
+
+    if cfg.is_enc_dec:
+        return Model(
+            cfg=cfg,
+            dims=dims,
+            max_seq=max_seq,
+            init=lambda key: W.whisper_init(key, cfg, dims, max_seq),
+            loss=lambda p, batch: W.loss_fn(p, batch, cfg, dims),
+            prefill=lambda p, tokens, frames: W.prefill(
+                p, tokens, frames, cfg, dims, max_seq=max_seq
+            ),
+            decode_step=lambda p, cache, token, pos: W.decode_step(
+                p, cache, token, pos, cfg, dims
+            ),
+            init_cache=lambda batch: W.init_cache(cfg, dims, batch, max_seq),
+        )
+
+    return Model(
+        cfg=cfg,
+        dims=dims,
+        max_seq=max_seq,
+        init=lambda key: T.stack_init(key, cfg, dims),
+        loss=lambda p, batch: T.loss_fn(p, batch, cfg, dims),
+        prefill=lambda p, tokens: T.prefill(
+            p, tokens, cfg, dims, max_seq=max_seq
+        ),
+        decode_step=lambda p, cache, token, pos: T.decode_step(
+            p, cache, token, pos, cfg, dims
+        ),
+        init_cache=lambda batch: T.init_cache(cfg, dims, batch, max_seq),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs for the dry-run
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(
+    cfg: ArchConfig, cell: ShapeCell, *, tp: int = 1
+) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one (arch × shape) cell.
+
+    train  -> {"batch": {...}}                       for model.loss
+    prefill-> {"tokens": ..., ("frames": ...)}       for model.prefill
+    decode -> {"cache": ..., "token": ..., "pos": ...} for model.decode_step
+    """
+    b, s = cell.global_batch, cell.seq_len
+    model = build_model(cfg, tp=tp, max_seq=s)
+    dt = T.compute_dtype(cfg)
+    if cell.kind == "train":
+        batch: dict[str, Any] = {
+            "tokens": _sds((b, s), jnp.int32),
+            "targets": _sds((b, s), jnp.int32),
+        }
+        if cfg.is_enc_dec:
+            batch["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), dt)
+        return {"batch": batch}
+    if cell.kind == "prefill":
+        out: dict[str, Any] = {"tokens": _sds((b, s), jnp.int32)}
+        if cfg.is_enc_dec:
+            out["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), dt)
+        return out
+    # decode: abstract cache via eval_shape of init_cache
+    cache = jax.eval_shape(lambda: model.init_cache(b))
+    return {
+        "cache": cache,
+        "token": _sds((b,), jnp.int32),
+        "pos": _sds((b,), jnp.int32),
+    }

@@ -1,0 +1,376 @@
+"""Attention: GQA with global / sliding-window / chunked variants.
+
+Training/prefill path is a blockwise (flash-style) implementation in pure
+JAX: vmap over query blocks × lax.scan over KV blocks with an online
+softmax, so peak memory is O(S · block) instead of O(S²) — mandatory for
+the 32k prefill cells. Three structural specializations:
+
+  * global  — online-softmax over all KV blocks (causal or bidirectional);
+  * local   — banded: each query block attends only to its window-span of
+              KV (FLOPs O(S·W) instead of O(S²));
+  * chunked — chunk-diagonal (llama4): fold chunks into the batch and run
+              the causal path inside each chunk (FLOPs O(S·C)).
+
+Decode path is a single-token attention over a cache with explicit
+`slot_pos` validity (supports ring buffers for local/chunked layers —
+that is what makes `long_500k` feasible for hybrid archs).
+
+Known inefficiency (recorded for §Roofline): the global causal path
+computes fully-masked upper-diagonal blocks (≈2× the optimal FLOPs);
+block-skipping is a hillclimb item, visible in MODEL_FLOPS/HLO_FLOPs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models.layers import softcap
+
+NEG = -1e30
+
+
+def _pos_mask(
+    qi: jax.Array,  # (bq,) absolute query positions
+    kj: jax.Array,  # (bk,) absolute key positions
+    *,
+    kind: str,
+    window: int,
+    causal: bool,
+) -> jax.Array:
+    m = kj[None, :] >= 0  # left-pad slots carry negative positions
+    if causal:
+        m &= qi[:, None] >= kj[None, :]
+    if kind == "local" and window:
+        m &= (qi[:, None] - kj[None, :]) < window
+    if kind == "chunked" and window:
+        m &= (qi[:, None] // window) == (kj[None, :] // window)
+    return m
+
+
+SCORE_DTYPE = jnp.float32  # set bfloat16 via score_dtype() for §Perf
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def score_dtype(dtype):
+    """Experiment knob: compute blockwise scores/softmax in `dtype`
+    (bf16 halves the score-tensor HBM traffic; accumulators stay f32)."""
+    global SCORE_DTYPE
+    prev = SCORE_DTYPE
+    SCORE_DTYPE = dtype
+    try:
+        yield
+    finally:
+        SCORE_DTYPE = prev
+
+
+def _scores(qb, kb, cap):
+    """(B,bq,G,R,hd) x (B,bk,G,hd) -> (B,G,R,bq,bk), scaled+capped."""
+    hd = qb.shape[-1]
+    s = jnp.einsum(
+        "bqgrd,bkgd->bgrqk", qb, kb, preferred_element_type=SCORE_DTYPE
+    )
+    s = s * (1.0 / jnp.sqrt(jnp.asarray(hd, SCORE_DTYPE)))
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    return s
+
+
+def _attend_block(s, vspan, mask):
+    """Direct softmax over one contiguous KV span (used by local path).
+
+    s: (B,G,R,bq,span) f32 scores; vspan: (B,span,G,hd); mask: (bq,span).
+    Returns (B,bq,G,R,hd) f32.
+    """
+    s = jnp.where(mask[None, None, None], s, NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - jnp.maximum(m, NEG / 2))
+    l = jnp.sum(p, axis=-1)  # (B,G,R,bq)
+    o = jnp.einsum(
+        "bgrqk,bkgd->bqgrd", p, vspan, preferred_element_type=jnp.float32
+    )
+    return o / jnp.maximum(jnp.moveaxis(l, 3, 1)[..., None], 1e-20)
+
+
+def _global_blockwise(
+    q, k, v, *, causal, cap, q0, k0, block_q, block_k
+) -> jax.Array:
+    """Online-softmax over all KV blocks. q (B,Sq,G,R,hd), k/v (B,Sk,G,hd)."""
+    b, sq, g, r, hd = q.shape
+    sk = k.shape[1]
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    pq = (-sq) % bq
+    pk = (-sk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq = qp.shape[1] // bq
+    nk = kp.shape[1] // bk
+    kpos = jnp.arange(kp.shape[1]) + k0
+    kpos = jnp.where(jnp.arange(kp.shape[1]) < sk, kpos, -1)  # pad invalid
+
+    def per_qblock(qb, i):
+        qi = i * bq + jnp.arange(bq) + q0
+        m0 = jnp.full((b, g, r, bq), NEG, jnp.float32)
+        l0 = jnp.zeros((b, g, r, bq), jnp.float32)
+        a0 = jnp.zeros((b, g, r, bq, hd), jnp.float32)
+
+        # NOTE: the body is checkpointed so the backward pass recomputes
+        # the (bq x bk) score/softmax tensors per KV step instead of
+        # saving all nk of them (flash-attention-style memory behavior;
+        # without this the saved p tensors dominate training temp memory).
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def kv_step(carry, j):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(kp, j * bk, bk, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(vp, j * bk, bk, axis=1)
+            kj = jax.lax.dynamic_slice_in_dim(kpos, j * bk, bk, axis=0)
+            s = _scores(qb, kb, cap)  # (B,G,R,bq,bk)
+            mask = _pos_mask(qi, kj, kind="global", window=0, causal=causal)
+            s = jnp.where(mask[None, None, None], s, NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1).astype(jnp.float32))
+            p = jnp.exp(s.astype(SCORE_DTYPE)
+                        - m_new[..., None].astype(SCORE_DTYPE))
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1,
+                                    dtype=jnp.float32)
+            pv = jnp.einsum(
+                "bgrqk,bkgd->bgrqd", p, vb,
+                preferred_element_type=jnp.float32,
+            )
+            acc = acc * alpha[..., None] + pv
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), jnp.arange(nk)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-20)  # (B,G,R,bq,hd)
+        return jnp.moveaxis(out, 3, 1)  # (B,bq,G,R,hd)
+
+    # Internal layout constraints: keep batch on the data axes and KV
+    # heads on the model axis through the blocked layout — without these
+    # XLA's propagation can pick conflicting shardings between the fwd
+    # and transpose passes and fall back to "involuntary full
+    # rematerialization" (replicate + repartition), observed as multi-GiB
+    # copies in the bwd loop.
+    kp = constrain(kp, "dp", None, "tp", None)
+    vp = constrain(vp, "dp", None, "tp", None)
+    qbs = jnp.moveaxis(
+        qp.reshape(b, nq, bq, g, r, hd), 1, 0
+    )  # (nq,B,bq,G,R,hd)
+    qbs = constrain(qbs, None, "dp", None, "tp", None, None)
+    outs = jax.vmap(per_qblock)(qbs, jnp.arange(nq))  # (nq,B,bq,G,R,hd)
+    outs = constrain(outs, None, "dp", None, "tp", None, None)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * bq, g, r, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def _local_banded(q, k, v, *, window, cap, block) -> jax.Array:
+    """Sliding-window: query block i sees KV span [i*b - Wb, i*b + b)."""
+    b, sq, g, r, hd = q.shape
+    sk = k.shape[1]
+    bq = min(block, sq)
+    wb = -(-window // bq) * bq  # window rounded up to whole blocks
+    pq = (-sq) % bq
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+    nq = qp.shape[1] // bq
+    # left-pad KV by wb; right-pad to cover the last query block
+    rpad = max(nq * bq - sk, 0)
+    kp = jnp.pad(k, ((0, 0), (wb, rpad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (wb, rpad), (0, 0), (0, 0)))
+    kpos = jnp.arange(kp.shape[1]) - wb
+    kpos = jnp.where((kpos >= 0) & (kpos < sk), kpos, -1)
+    span = wb + bq
+
+    def per_qblock(qb, i):
+        qi = i * bq + jnp.arange(bq)
+        ks = jax.lax.dynamic_slice_in_dim(kp, i * bq, span, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(vp, i * bq, span, axis=1)
+        kj = jax.lax.dynamic_slice_in_dim(kpos, i * bq, span, axis=0)
+        s = _scores(qb, ks, cap)
+        mask = _pos_mask(qi, kj, kind="local", window=window, causal=True)
+        return _attend_block(s, vs, mask)  # (B,bq,G,R,hd)
+
+    qbs = jnp.moveaxis(qp.reshape(b, nq, bq, g, r, hd), 1, 0)
+    outs = jax.vmap(per_qblock)(qbs, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * bq, g, r, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, Kv, hd)
+    v: jax.Array,  # (B, Sk, Kv, hd)
+    *,
+    kind: str = "global",  # global | local | chunked
+    window: int = 0,
+    cap: float = 0.0,
+    causal: bool = True,
+    q_offset: int = 0,  # absolute position of q[0] (cross-attn: 0)
+    block_q: int = 512,
+    block_k: int = 512,
+) -> jax.Array:
+    """Multi-head attention with GQA; returns (B, Sq, H, hd)."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    assert h % kv == 0, (h, kv)
+    qg = q.reshape(b, sq, kv, h // kv, hd)
+    sk = k.shape[1]
+
+    if kind == "chunked" and window and window < sq:
+        assert sq == sk and q_offset == 0, (
+            "chunked train path expects self-attention"
+        )
+        pad = (-sq) % window  # right-pad to whole chunks (causal-safe)
+        qp = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        nc = (sq + pad) // window
+        qc = qp.reshape(b * nc, window, kv, h // kv, hd)
+        kc = kp.reshape(b * nc, window, kv, hd)
+        vc = vp.reshape(b * nc, window, kv, hd)
+        out = _global_blockwise(
+            qc, kc, vc, causal=causal, cap=cap, q0=0, k0=0,
+            block_q=block_q, block_k=block_k,
+        )
+        return out.reshape(b, sq + pad, h, hd)[:, :sq]
+
+    if kind == "local" and window and window < sk:
+        assert sq == sk and q_offset == 0, "banded path is self-attention"
+        out = _local_banded(qg, k, v, window=window, cap=cap, block=block_q)
+        return out.reshape(b, sq, h, hd)
+
+    out = _global_blockwise(
+        qg, k, v, causal=causal, cap=cap, q0=q_offset, k0=0,
+        block_q=block_q, block_k=block_k,
+    )
+    return out.reshape(b, sq, h, hd)
+
+
+def attention_reference(
+    q, k, v, *, kind="global", window=0, cap=0.0, causal=True, q_offset=0
+) -> jax.Array:
+    """Naive O(S²) oracle for tests."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    qg = q.reshape(b, sq, kv, h // kv, hd)
+    s = jnp.einsum(
+        "bqgrd,bkgd->bgrqk", qg, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.float32(hd))
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    qi = jnp.arange(sq) + q_offset
+    kj = jnp.arange(k.shape[1])
+    mask = _pos_mask(qi, kj, kind=kind, window=window, causal=causal)
+    s = jnp.where(mask[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bgrqk,bkgd->bqgrd", p, v, preferred_element_type=jnp.float32
+    )
+    return o.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def _decode_valid(slot_pos, pos, kind, window):
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    if kind == "local" and window:
+        valid &= (pos[:, None] - slot_pos) < window
+    if kind == "chunked" and window:
+        valid &= (slot_pos // window) == (pos[:, None] // window)
+    return valid
+
+
+def attention_decode(
+    q: jax.Array,  # (B, H, hd) — one new token per sequence
+    k_cache: jax.Array,  # (B, S_cache, Kv, hd) — bf16/f32 or int8
+    v_cache: jax.Array,  # (B, S_cache, Kv, hd)
+    slot_pos: jax.Array,  # (B, S_cache) int32 absolute positions, -1 empty
+    pos: jax.Array,  # (B,) absolute position of the new token
+    *,
+    kind: str = "global",
+    window: int = 0,
+    cap: float = 0.0,
+    block_k: int = 8192,
+    k_scale: Optional[jax.Array] = None,  # (B, S_cache, Kv) for int8 KV
+    v_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Single-token attention over a (ring) cache.
+
+    Caches longer than `block_k` are processed by an online-softmax scan
+    over KV blocks so the f32 score buffer is O(block_k), not O(S_cache)
+    — at 32k/500k caches the direct path's temps would rival the cache
+    itself. int8 KV caches (with per-slot-per-head scales) dequantize
+    per BLOCK inside the scan, so HBM moves int8 — the memory-roofline
+    optimization for decode.
+    """
+    b, h, hd = q.shape
+    kv = k_cache.shape[2]
+    qg = q.reshape(b, kv, h // kv, hd)
+    sc = k_cache.shape[1]
+    dt = q.dtype
+
+    def block(kb, vb, sp_b, ksb, vsb):
+        if ksb is not None:  # dequantize the block (fused, VMEM-sized)
+            kb = kb.astype(jnp.float32) * ksb[..., None]
+            vb = (vb.astype(jnp.float32) * vsb[..., None]).astype(dt)
+            kb = kb.astype(dt)
+        s = jnp.einsum(
+            "bgrd,bkgd->bgrk", qg, kb, preferred_element_type=jnp.float32
+        ) / jnp.sqrt(jnp.float32(hd))
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        valid = _decode_valid(sp_b, pos, kind, window)
+        return jnp.where(valid[:, None, None, :], s, NEG), vb
+
+    if sc <= block_k:
+        s, vd = block(k_cache, v_cache, slot_pos, k_scale, v_scale)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum(
+            "bgrk,bkgd->bgrd", p, vd,
+            preferred_element_type=jnp.float32,
+        )
+        return o.reshape(b, h, hd).astype(dt)
+
+    nb = -(-sc // block_k)
+    pad = nb * block_k - sc
+    kp = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    spp = jnp.pad(slot_pos, ((0, 0), (0, pad)), constant_values=-1)
+    ksp = vsp = None
+    if k_scale is not None:
+        ksp = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+        vsp = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
+
+    def kv_step(carry, j):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(kp, j * block_k, block_k, 1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, j * block_k, block_k, 1)
+        sp_b = jax.lax.dynamic_slice_in_dim(spp, j * block_k, block_k, 1)
+        ksb = vsb = None
+        if ksp is not None:
+            ksb = jax.lax.dynamic_slice_in_dim(ksp, j * block_k, block_k, 1)
+            vsb = jax.lax.dynamic_slice_in_dim(vsp, j * block_k, block_k, 1)
+        s, vb = block(kb, vb, sp_b, ksb, vsb)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bgrk,bkgd->bgrd", p, vb, preferred_element_type=jnp.float32
+        )
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kv, h // kv), NEG, jnp.float32)
+    l0 = jnp.zeros((b, kv, h // kv), jnp.float32)
+    a0 = jnp.zeros((b, kv, h // kv, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nb))
+    o = acc / jnp.maximum(l[..., None], 1e-20)
+    return o.reshape(b, h, hd).astype(dt)

@@ -1,0 +1,280 @@
+"""Primitive NN layers — pure init/apply pairs over jnp pytrees.
+
+Conventions (whole substrate):
+  * params are pytrees of f32 "master" arrays; applies cast to the compute
+    dtype (bf16 on TPU) at use — standard mixed precision;
+  * every init takes an explicit PRNG key; every apply is pure;
+  * 2-D weights are (in_features, out_features) so `dist.sharding`'s rule
+    table can assign (fsdp, tp) / (tp, fsdp) specs by path name;
+  * the paper's technique enters through `linear_apply`: an optional
+    `SPEConfig` applies co-design prune-STE + fake-quant in training, and
+    a *compiled* param dict ({"packed","scale"} or
+    {"values_q","select","scale"}) swaps in compressed storage at serve
+    time (the memory-roofline optimization measured in §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+from repro.core import sparsity as S
+from repro.core.spe import SPEConfig, spe_train_weight
+
+
+# ---------------------------------------------------------------------------
+# Linear (+ the SPE/quant entry point)
+# ---------------------------------------------------------------------------
+
+
+def linear_init(
+    key: jax.Array, d_in: int, d_out: int, *, bias: bool = False,
+    scale: Optional[float] = None,
+) -> dict:
+    s = scale if scale is not None else d_in ** -0.5
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * s}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear_apply(
+    params: dict,
+    x: jax.Array,
+    *,
+    spe: Optional[SPEConfig] = None,
+    dtype: jnp.dtype = jnp.bfloat16,
+) -> jax.Array:
+    """y = x @ W (+ b). Dispatches on the param format:
+
+    {"w"}                      dense master weights (training / baseline);
+                               `spe` applies the paper's QAT constraints.
+    {"packed","scale"}         compiled mixed-bit-width storage (CMUL):
+                               unpack + matmul (XLA path — the Pallas
+                               `quant_matmul` kernel is the TPU runtime
+                               twin, validated in tests).
+    {"values_q","select","scale"}  compiled sparse+quant storage (SPE).
+    """
+    if "w" in params:
+        w = params["w"]
+        if spe is not None:
+            w = spe_train_weight(w, spe)
+        y = x.astype(dtype) @ w.astype(dtype)
+    elif "packed" in params:
+        # bit width is encoded in the packed shape (keeps the param tree
+        # array-only, so stacked layers scan cleanly): rows = ceil(K*b/8)
+        k = x.shape[-1]
+        bits = (8 * params["packed"].shape[-2]) // k
+        w = Q.unpack_planes(params["packed"], bits, k).astype(dtype)
+        y = (x.astype(dtype) @ w) * params["scale"].astype(dtype)
+    elif "values_q" in params:
+        meta = params["meta"]
+        cfg = S.SparsityConfig(int(meta["group"]), int(meta["keep"]))
+        dense = S.decompress(
+            params["values_q"].astype(dtype), params["select"], cfg,
+            (params["values_q"].shape[0] // cfg.keep) * cfg.group_size,
+        )
+        k = x.shape[-1]
+        y = (x.astype(dtype) @ dense[:k]) * params["scale"].astype(dtype)
+    else:
+        raise ValueError(f"unknown linear param format: {list(params)}")
+    if "b" in params:
+        y = y + params["b"].astype(dtype)
+    return y
+
+
+def compile_linear_quant(params: dict, bits: int) -> dict:
+    """Dense {"w"} -> packed mixed-bit-width serving format.
+
+    Handles stacked (n_groups, K, N) block weights by vmapping over the
+    leading dim (the scan slices them back to 2-D at apply time). The bit
+    width is recoverable from the packed shape, so the output tree stays
+    array-only (scan-compatible).
+    """
+    w = params["w"]
+
+    def one(w2):
+        q, scale = Q.quantize(w2, Q.QuantConfig(bits=bits))
+        return Q.pack_planes(q, bits), scale.reshape(1, -1)
+
+    if w.ndim == 3:
+        packed, scale = jax.vmap(one)(w)
+    else:
+        packed, scale = one(w)
+    out = {"packed": packed, "scale": scale}
+    if "b" in params:
+        out["b"] = params["b"]
+    return out
+
+
+def compile_linear_sparse_quant(
+    params: dict, bits: int, group: int = 16, keep: int = 8
+) -> dict:
+    """Dense {"w"} -> SPE compressed (values+select) serving format."""
+    w = params["w"]
+    k = w.shape[0]
+    pad = (-k) % group
+    if pad:
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    scfg = S.SparsityConfig(group, keep)
+    values, select = S.compress(S.apply_prune(w, scfg), scfg)
+    q, scale = Q.quantize(values, Q.QuantConfig(bits=bits))
+    out = {
+        "values_q": q,
+        "select": select,
+        "scale": scale.reshape(1, -1),
+        "meta": {"group": group, "keep": keep, "bits": bits},
+    }
+    if "b" in params:
+        out["b"] = params["b"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_apply(params: dict, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return y.astype(dt)
+
+
+def layernorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm_apply(params: dict, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(dt)
+
+
+def norm_init(kind: str, d: int) -> dict:
+    return rmsnorm_init(d) if kind == "rmsnorm" else layernorm_init(d)
+
+
+def norm_apply(kind: str, params: dict, x: jax.Array) -> jax.Array:
+    if kind == "rmsnorm":
+        return rmsnorm_apply(params, x)
+    return layernorm_apply(params, x)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, jnp.float32) / hd))
+
+
+def apply_rope(
+    x: jax.Array,  # (B, S, H, hd)
+    pos: jax.Array,  # (B, S) int — or (B, 3, S) for M-RoPE
+    *,
+    theta: float,
+    sections: Sequence[int] = (),
+) -> jax.Array:
+    """Rotate half-pairs. With `sections` (M-RoPE), the hd/2 frequency
+    slots are split into (t, h, w) groups, each indexed by its own
+    position row of `pos` (text positions use identical rows, which
+    reduces exactly to standard RoPE)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    if sections:
+        assert sum(sections) == hd // 2, (sections, hd)
+        assert pos.ndim == 3 and pos.shape[1] == len(sections)
+        parts = []
+        start = 0
+        for i, sec in enumerate(sections):
+            p = pos[:, i, :].astype(jnp.float32)  # (B, S)
+            parts.append(p[:, :, None] * freqs[start : start + sec])
+            start += sec
+        ang = jnp.concatenate(parts, axis=-1)  # (B, S, hd/2)
+    else:
+        ang = pos.astype(jnp.float32)[:, :, None] * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN (SwiGLU / GeGLU / plain GELU MLP)
+# ---------------------------------------------------------------------------
+
+
+def ffn_init(
+    key: jax.Array, d: int, f: int, *, act: str, bias: bool = False
+) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act in ("swiglu", "geglu"):
+        return {
+            "w_gate": linear_init(k1, d, f, bias=bias),
+            "w_up": linear_init(k2, d, f, bias=bias),
+            "w_down": linear_init(k3, f, d, bias=bias),
+        }
+    return {
+        "w_up": linear_init(k1, d, f, bias=bias),
+        "w_down": linear_init(k2, f, d, bias=bias),
+    }
+
+
+def ffn_apply(
+    params: dict,
+    x: jax.Array,
+    *,
+    act: str,
+    spe: Optional[SPEConfig] = None,
+    dtype: jnp.dtype = jnp.bfloat16,
+) -> jax.Array:
+    if act in ("swiglu", "geglu"):
+        g = linear_apply(params["w_gate"], x, spe=spe, dtype=dtype)
+        u = linear_apply(params["w_up"], x, spe=spe, dtype=dtype)
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        return linear_apply(params["w_down"], g * u, spe=spe, dtype=dtype)
+    h = linear_apply(params["w_up"], x, spe=spe, dtype=dtype)
+    return linear_apply(params["w_down"], jax.nn.gelu(h), spe=spe, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key: jax.Array, vocab: int, d: int) -> dict:
+    return {"w": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed_apply(
+    params: dict, tokens: jax.Array, *, dtype: jnp.dtype = jnp.bfloat16,
+    scale: bool = False,
+) -> jax.Array:
+    h = params["w"].astype(dtype)[tokens]
+    if scale:
+        h = h * jnp.asarray(
+            jnp.sqrt(jnp.float32(params["w"].shape[1])), dtype
+        )
+    return h
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

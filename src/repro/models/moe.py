@@ -1,0 +1,145 @@
+"""Mixture-of-Experts: top-k routing with sort-based capacity dispatch.
+
+Parallelization choice (recorded in DESIGN.md §5): expert weights are
+sharded **tensor-parallel on the hidden dim F** ('model' axis), not
+expert-parallel on E. The dispatch/combine scatter/gathers then touch
+tensors sharded only along batch (data axes) — no all-to-all, and GSPMD
+partitions the expert einsums cleanly. For E ≫ chips, EP+all-to-all wins;
+at E ≤ 64 and model=16 the TP form has strictly fewer collectives (both
+schedules are visible in §Roofline; EP is a recorded alternative).
+
+Dispatch is sort-based (dropless up to a capacity factor): tokens are
+ranked within their expert via a per-row argsort, giving each (token,
+expert-slot) a position; tokens beyond capacity C = ceil(S·k/E · cf) are
+dropped (weight 0) — the same "balanced workload" philosophy as the
+paper's co-design pruning, here applied to token routing.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoESpec
+from repro.dist.sharding import constrain
+from repro.models.layers import linear_init
+
+
+def moe_init(key: jax.Array, d: int, spec: MoESpec) -> dict:
+    e, f = spec.num_experts, spec.d_ff_expert
+    ks = jax.random.split(key, 5)
+    s_in = 1.0 / (d ** 0.5)
+    s_out = 1.0 / (f ** 0.5)
+    p = {
+        "router": {"w": jax.random.normal(ks[0], (d, e), jnp.float32) * s_in},
+        "w_gate": jax.random.normal(ks[1], (e, d, f), jnp.float32) * s_in,
+        "w_up": jax.random.normal(ks[2], (e, d, f), jnp.float32) * s_in,
+        "w_down": jax.random.normal(ks[3], (e, f, d), jnp.float32) * s_out,
+    }
+    if spec.shared_expert_ff:
+        from repro.models.layers import ffn_init
+
+        p["shared"] = ffn_init(ks[4], d, spec.shared_expert_ff, act="swiglu")
+    return p
+
+
+def _positions_within_expert(
+    eidx: jax.Array,  # (B, S*k) int32 expert ids, flattened slot-major
+    num_experts: int,
+) -> jax.Array:
+    """pos[b, t] = rank of token-slot t among slots routed to the same
+    expert in row b (arrival order). Sort-based: O(S·k log) per row,
+    no (B, S·k, E) one-hot materialization."""
+    b, n = eidx.shape
+    order = jnp.argsort(eidx, axis=1, stable=True)  # (B, N)
+    sorted_e = jnp.take_along_axis(eidx, order, axis=1)
+    counts = jnp.zeros((b, num_experts), jnp.int32).at[
+        jnp.arange(b)[:, None], eidx
+    ].add(1)
+    starts = jnp.cumsum(counts, axis=1) - counts  # exclusive cumsum (B, E)
+    pos_sorted = jnp.arange(n)[None, :] - jnp.take_along_axis(
+        starts, sorted_e, axis=1
+    )
+    inv = jnp.argsort(order, axis=1)
+    return jnp.take_along_axis(pos_sorted, inv, axis=1)  # (B, N)
+
+
+def moe_apply(
+    params: dict,
+    x: jax.Array,  # (B, S, D)
+    spec: MoESpec,
+    *,
+    dtype=jnp.bfloat16,
+    capacity: Optional[int] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,D), aux_loss scalar f32)."""
+    b, s, d = x.shape
+    e, k = spec.num_experts, spec.top_k
+    c = capacity or max(
+        1, int(-(-s * k * spec.capacity_factor // e))
+    )
+    c = min(c, s * k)
+
+    logits = (
+        x.astype(jnp.float32) @ params["router"]["w"].astype(jnp.float32)
+    )  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)  # (B,S,k)
+    gates = gates / jnp.maximum(
+        jnp.sum(gates, axis=-1, keepdims=True), 1e-9
+    )
+
+    flat_e = eidx.reshape(b, s * k)
+    pos = _positions_within_expert(flat_e, e).reshape(b, s, k)
+    keep = pos < c
+    pos_c = jnp.minimum(pos, c - 1)
+
+    barange = jnp.arange(b)[:, None]
+    xe = jnp.zeros((b, e, c, d), dtype)
+    xc = x.astype(dtype)
+    for i in range(k):  # static k: one scatter-add per expert-slot
+        upd = jnp.where(keep[:, :, i, None], xc, 0)
+        xe = xe.at[barange, eidx[:, :, i], pos_c[:, :, i]].add(upd)
+
+    # D sharded on the model axis: the dispatch scatter-add is then local
+    # per D-shard (no all-reduce of the inflated buffer), and the expert
+    # up-projection's D-contraction reduce-scatters onto the F-sharded
+    # hidden — wire bytes drop ~4x vs scattering into a replicated xe.
+    xe = constrain(xe, "dp", None, None, "tp")
+    wg = params["w_gate"].astype(dtype)
+    wu = params["w_up"].astype(dtype)
+    wd = params["w_down"].astype(dtype)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, wg)) * jnp.einsum(
+        "becd,edf->becf", xe, wu
+    )
+    h = constrain(h, "dp", None, None, "tp")
+    ye = jnp.einsum("becf,efd->becd", h, wd)  # (B,E,C,D)
+    # keep D sharded on the model axis: the TP-F contraction then emits a
+    # reduce-scatter (1x wire) instead of an all-reduce (2x wire) of this
+    # 8.6x-inflated dispatch tensor, and the combine gathers operate on
+    # D/16 shards — matches the SP-sharded residual stream downstream.
+    ye = constrain(ye, "dp", None, None, "tp")
+
+    y = jnp.zeros((b, s, d), jnp.float32)
+    for i in range(k):
+        gath = ye[barange, eidx[:, :, i], pos_c[:, :, i]]  # (B,S,D)
+        w_i = jnp.where(keep[:, :, i], gates[:, :, i], 0.0)
+        y = y + gath.astype(jnp.float32) * w_i[:, :, None]
+    y = constrain(y, "dp", None, "tp")
+
+    if "shared" in params:
+        from repro.models.layers import ffn_apply
+
+        y = y + ffn_apply(
+            params["shared"], x, act="swiglu", dtype=dtype
+        ).astype(jnp.float32)
+
+    # Switch-style load-balance aux: E * sum_e (token_frac_e * prob_mass_e)
+    frac = jnp.mean(
+        jax.nn.one_hot(eidx, e, dtype=jnp.float32), axis=(1, 2)
+    )  # (B, E)
+    pmass = jnp.mean(probs, axis=1)  # (B, E)
+    aux = e * jnp.mean(jnp.sum(frac * pmass, axis=-1))
+    return y.astype(dtype), aux

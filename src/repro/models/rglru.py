@@ -1,0 +1,108 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+    r_t = sigmoid(x_t @ W_a + b_a)              (recurrence gate)
+    i_t = sigmoid(x_t @ W_i + b_i)              (input gate)
+    log a_t = -c * softplus(Lambda) * r_t       (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The block wraps the LRU with a gated residual branch and a width-4 causal
+depthwise temporal conv, per the Griffin paper. Training evaluates the
+linear recurrence with `jax.lax.associative_scan` (log-depth, parallel);
+decode is the exact single-step update — O(1) state, which is why
+recurrentgemma runs the `long_500k` cell.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spe import SPEConfig
+from repro.models.layers import linear_apply, linear_init
+
+LRU_C = 8.0
+
+
+def rglru_init(key: jax.Array, d: int, r: int, conv_width: int = 4) -> dict:
+    ks = jax.random.split(key, 7)
+    # Lambda init so a ranges over ~(0.9, 0.999) at r_t=1 (Griffin init)
+    lam_min, lam_max = 0.9, 0.999
+    u = jax.random.uniform(ks[0], (r,), jnp.float32)
+    a_init = lam_min + u * (lam_max - lam_min)
+    # solve softplus(Lambda) = -log(a)/c  =>  Lambda = log(expm1(-log(a)/c))
+    lam = jnp.log(jnp.expm1(-jnp.log(a_init) / LRU_C))
+    return {
+        "w_x": linear_init(ks[1], d, r),  # input projection
+        "w_gate": linear_init(ks[2], d, r),  # gelu gate branch
+        "conv_w": jax.random.normal(ks[3], (conv_width, r), jnp.float32)
+        * (1.0 / conv_width**0.5),
+        "conv_b": jnp.zeros((r,), jnp.float32),
+        "w_a": linear_init(ks[4], r, r),  # recurrence gate
+        "w_i": linear_init(ks[5], r, r),  # input gate
+        "b_a": jnp.zeros((r,), jnp.float32),
+        "b_i": jnp.zeros((r,), jnp.float32),
+        "lam": lam,
+        "w_out": linear_init(ks[6], r, d),
+    }
+
+
+def _causal_conv(
+    u: jax.Array,  # (B, S, R)
+    w: jax.Array,  # (W, R) depthwise taps
+    b: jax.Array,
+    prev: Optional[jax.Array] = None,  # (B, W-1, R) carry-in
+) -> tuple[jax.Array, jax.Array]:
+    width = w.shape[0]
+    bsz = u.shape[0]
+    if prev is None:
+        prev = jnp.zeros((bsz, width - 1, u.shape[-1]), u.dtype)
+    up = jnp.concatenate([prev, u], axis=1)
+    y = sum(
+        up[:, i : i + u.shape[1]] * w[i].astype(u.dtype)
+        for i in range(width)
+    )
+    return y + b.astype(u.dtype), up[:, -(width - 1):]
+
+
+def _lru_scan(a: jax.Array, b: jax.Array, h0: Optional[jax.Array]):
+    """h_t = a_t h_{t-1} + b_t via associative scan over S. a/b (B,S,R)."""
+    if h0 is not None:  # fold carry-in into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+        # note: a[:,0] still multiplies h0 exactly once (b absorbed it)
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_apply(
+    p: dict,
+    x: jax.Array,  # (B, S, D) — post-norm block input
+    *,
+    cache: Optional[dict] = None,  # {"h": (B,R), "conv": (B,W-1,R)}
+    spe: Optional[SPEConfig] = None,
+    dtype=jnp.bfloat16,
+) -> tuple[jax.Array, dict]:
+    gate = jax.nn.gelu(linear_apply(p["w_gate"], x, spe=spe, dtype=dtype))
+    u = linear_apply(p["w_x"], x, spe=spe, dtype=dtype)
+    conv_prev = cache["conv"] if cache else None
+    u, conv_new = _causal_conv(u, p["conv_w"], p["conv_b"], conv_prev)
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(
+        uf @ p["w_a"]["w"] + p["b_a"]
+    )
+    i = jax.nn.sigmoid(uf @ p["w_i"]["w"] + p["b_i"])
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r  # (B,S,R) f32
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    h0 = cache["h"] if cache else None
+    h = _lru_scan(a, b, h0)  # (B,S,R) f32
+    y = (h.astype(dtype) * gate)
+    y = linear_apply(p["w_out"], y, spe=spe, dtype=dtype)
+    new_cache = {"h": h[:, -1], "conv": conv_new}
+    return y, new_cache

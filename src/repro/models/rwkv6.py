@@ -1,0 +1,242 @@
+"""RWKV-6 ("Finch") block: data-dependent-decay linear attention.
+
+Time-mix with per-channel data-dependent decay w_t and bonus u:
+
+    out_t = r_t · (diag(u) k_t v_tᵀ + S_{t-1})
+    S_t   = diag(w_t) S_{t-1} + k_t v_tᵀ            (per head, hd×hd state)
+
+Training runs a **chunked** evaluation (the standard parallel form): within
+a chunk of C tokens the contributions are einsums over decay ratios
+exp(cum_t - cum_s); across chunks a lax.scan carries the state. Decay
+exponents are clamped so every in-chunk ratio stays < e^{4C} — with C=16
+that bounds all intermediates < e64, safely inside f32 (documented; the
+clamp matches RWKV reference kernels' w clipping).
+
+Decode is the exact single-token recurrence on (state, shift) — O(1) per
+token, which is why rwkv6 runs the `long_500k` cell.
+
+The projections (r/k/v/g/o + channel-mix) are `layers.linear_apply`, so
+the paper's SPE/quant knobs apply to them; the recurrence itself is exact.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spe import SPEConfig
+from repro.models.layers import layernorm_apply, layernorm_init, linear_apply
+
+MIX_NAMES = ("w", "k", "v", "r", "g")
+LORA_MIX = 32
+LORA_DECAY = 64
+CHUNK = 16
+WW_CLAMP = (-8.0, 1.386)  # exp(ww) <= 4 -> |log w| <= 4
+
+
+def rwkv_init(key: jax.Array, d: int, d_ff: int, head_dim: int) -> dict:
+    h = d // head_dim
+    ks = jax.random.split(key, 16)
+    s = 1.0 / (d**0.5)
+    lin = lambda kk, di, do: {
+        "w": jax.random.normal(kk, (di, do), jnp.float32) / (di**0.5)
+    }
+    return {
+        "ln1": layernorm_init(d),
+        "ln2": layernorm_init(d),
+        "mu_x": jnp.zeros((d,), jnp.float32),
+        "mu": jnp.zeros((len(MIX_NAMES), d), jnp.float32),
+        "lora_a": jax.random.normal(
+            ks[0], (d, len(MIX_NAMES), LORA_MIX), jnp.float32
+        ) * s * 0.1,
+        "lora_b": jnp.zeros((len(MIX_NAMES), LORA_MIX, d), jnp.float32),
+        "w_r": lin(ks[1], d, d),
+        "w_k": lin(ks[2], d, d),
+        "w_v": lin(ks[3], d, d),
+        "w_g": lin(ks[4], d, d),
+        "w_o": lin(ks[5], d, d),
+        "w0": jnp.full((d,), -0.6, jnp.float32),  # exp(-exp(-0.6))≈0.58
+        "w_lora_a": jax.random.normal(ks[6], (d, LORA_DECAY), jnp.float32)
+        * s * 0.1,
+        "w_lora_b": jnp.zeros((LORA_DECAY, d), jnp.float32),
+        "u": jnp.zeros((h, head_dim), jnp.float32),
+        "ln_x": layernorm_init(d),  # per-head groupnorm (applied per head)
+        "cm_mu_k": jnp.zeros((d,), jnp.float32),
+        "cm_mu_r": jnp.zeros((d,), jnp.float32),
+        "cm_k": lin(ks[7], d, d_ff),
+        "cm_v": lin(ks[8], d_ff, d),
+        "cm_r": lin(ks[9], d, d),
+    }
+
+
+def _ddlerp(p, x, x_prev, dtype):
+    """Data-dependent token-shift mixes -> (x_w, x_k, x_v, x_r, x_g)."""
+    xx = (x_prev - x).astype(dtype)
+    base = x + xx * p["mu_x"].astype(dtype)
+    lora = jnp.tanh(
+        jnp.einsum("bsd,dfm->bsfm", base, p["lora_a"].astype(dtype))
+    )
+    delta = jnp.einsum("bsfm,fmd->bsfd", lora, p["lora_b"].astype(dtype))
+    mixes = p["mu"].astype(dtype)[None, None] + delta  # (B,S,5,D)
+    return [x + xx * mixes[:, :, i] for i in range(len(MIX_NAMES))]
+
+
+def _decay_log_w(p, x_w, dtype):
+    """log w_t in [-4, 0): data-dependent per-channel decay."""
+    ww = p["w0"].astype(dtype) + jnp.tanh(
+        x_w @ p["w_lora_a"].astype(dtype)
+    ) @ p["w_lora_b"].astype(dtype)
+    ww = jnp.clip(ww.astype(jnp.float32), *WW_CLAMP)
+    return -jnp.exp(ww)  # (B,S,D) f32
+
+
+def _heads(x, h, hd):
+    return x.reshape(*x.shape[:-1], h, hd)
+
+
+def wkv_chunked(
+    r, k, v, log_w, u, state
+):  # r/k/v (B,S,H,hd) f32; log_w (B,S,H,hd) f32; state (B,H,hd,hd)
+    """Chunked WKV. Returns (out (B,S,H,hd), state')."""
+    b, s, h, hd = r.shape
+    c = min(CHUNK, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+
+    def chunk_step(carry, xs):
+        rc, kc, vc, lwc = xs  # (B,C,H,hd)
+        cum = jnp.cumsum(lwc, axis=1)  # inclusive (B,C,H,hd)
+        cumprev = cum - lwc
+        r_t = rc * jnp.exp(cumprev)
+        k_t = kc * jnp.exp(-cum)
+        # intra-chunk: A[t,s] for s < t, plus the u-bonus diagonal
+        a = jnp.einsum(
+            "bthk,bshk->bhts", r_t, k_t, preferred_element_type=jnp.float32
+        )
+        tri = jnp.tril(jnp.ones((c, c), jnp.float32), -1)
+        a = a * tri[None, None]
+        diag = jnp.einsum("bthk,bthk->bth", rc * u[None, None], kc)
+        intra = jnp.einsum("bhts,bshv->bthv", a, vc)
+        intra += diag[..., None] * vc
+        inter = jnp.einsum("bthk,bhkv->bthv", r_t, carry)
+        out_c = inter + intra
+        # carry update
+        decay_all = jnp.exp(cum[:, -1])  # (B,H,hd)
+        k_scaled = kc * jnp.exp(cum[:, -1:, :, :] - cum)
+        new_carry = carry * decay_all[..., None] + jnp.einsum(
+            "bshk,bshv->bhkv", k_scaled, vc
+        )
+        return new_carry, out_c
+
+    resh = lambda x: jnp.moveaxis(x.reshape(b, nc, c, h, hd), 1, 0)
+    state, outs = jax.lax.scan(
+        chunk_step, state, (resh(r), resh(k), resh(v), resh(log_w))
+    )
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+    return out, state
+
+
+def wkv_step(r, k, v, log_w, u, state):
+    """Exact single-token recurrence. r/k/v/log_w (B,H,hd); state (B,H,hd,hd)."""
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    out = jnp.einsum(
+        "bhk,bhkv->bhv", r, state + u[None, :, :, None] * kv
+    )
+    state = jnp.exp(log_w)[..., None] * state + kv
+    return out, state
+
+
+def _group_norm_heads(p, x, h, hd):
+    """Per-head layernorm (RWKV's GroupNorm(h)) using ln_x params."""
+    b, s, d = x.shape
+    xh = x.reshape(b, s, h, hd).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + 1e-5)
+    y = xh.reshape(b, s, d) * p["ln_x"]["scale"] + p["ln_x"]["bias"]
+    return y
+
+
+def time_mix(
+    p: dict,
+    x: jax.Array,  # (B,S,D) — post-ln1
+    head_dim: int,
+    *,
+    x_prev: Optional[jax.Array] = None,  # (B,1,D) carry-in shift state
+    state: Optional[jax.Array] = None,  # (B,H,hd,hd)
+    spe: Optional[SPEConfig] = None,
+    dtype=jnp.bfloat16,
+):
+    b, s, d = x.shape
+    h = d // head_dim
+    if x_prev is None:
+        x_prev = jnp.zeros((b, 1, d), x.dtype)
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, shifted, dtype)
+    r = _heads(linear_apply(p["w_r"], xr, spe=spe, dtype=dtype), h, head_dim)
+    k = _heads(linear_apply(p["w_k"], xk, spe=spe, dtype=dtype), h, head_dim)
+    v = _heads(linear_apply(p["w_v"], xv, spe=spe, dtype=dtype), h, head_dim)
+    g = linear_apply(p["w_g"], xg, spe=spe, dtype=dtype)
+    log_w = _heads(_decay_log_w(p, xw, dtype), h, head_dim)
+    if state is None:
+        state = jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+    out, state = wkv_chunked(
+        r.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), log_w, p["u"], state,
+    )
+    y = _group_norm_heads(p, out.reshape(b, s, d), h, head_dim)
+    y = (y.astype(dtype) * jax.nn.silu(g))
+    y = linear_apply(p["w_o"], y, spe=spe, dtype=dtype)
+    return y, (x[:, -1:], state)
+
+
+def channel_mix(
+    p: dict,
+    x: jax.Array,  # (B,S,D) — post-ln2
+    *,
+    x_prev: Optional[jax.Array] = None,
+    spe: Optional[SPEConfig] = None,
+    dtype=jnp.bfloat16,
+):
+    b, s, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((b, 1, d), x.dtype)
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    xx = (shifted - x).astype(dtype)
+    xk = x + xx * p["cm_mu_k"].astype(dtype)
+    xr = x + xx * p["cm_mu_r"].astype(dtype)
+    kk = jnp.square(
+        jax.nn.relu(linear_apply(p["cm_k"], xk, spe=spe, dtype=dtype))
+    )
+    vv = linear_apply(p["cm_v"], kk, spe=spe, dtype=dtype)
+    rr = jax.nn.sigmoid(linear_apply(p["cm_r"], xr, spe=spe, dtype=dtype))
+    return rr * vv, x[:, -1:]
+
+
+def block_apply(
+    p: dict,
+    h: jax.Array,
+    head_dim: int,
+    *,
+    cache: Optional[dict] = None,
+    spe: Optional[SPEConfig] = None,
+    dtype=jnp.bfloat16,
+):
+    """One full RWKV-6 residual block. cache carries
+    {tm_shift (B,1,D), cm_shift (B,1,D), state (B,H,hd,hd)} for decode."""
+    tm_shift = cache["tm_shift"] if cache else None
+    cm_shift = cache["cm_shift"] if cache else None
+    state = cache["state"] if cache else None
+    a_in = layernorm_apply(p["ln1"], h)
+    att, (tm_new, state_new) = time_mix(
+        p, a_in, head_dim, x_prev=tm_shift, state=state, spe=spe,
+        dtype=dtype,
+    )
+    h = h + att
+    c_in = layernorm_apply(p["ln2"], h)
+    ffn, cm_new = channel_mix(p, c_in, x_prev=cm_shift, spe=spe, dtype=dtype)
+    h = h + ffn
+    new_cache = {"tm_shift": tm_new, "cm_shift": cm_new, "state": state_new}
+    return h, new_cache

@@ -1,0 +1,701 @@
+"""Decoder-only LM stack: pattern-period scan over heterogeneous blocks.
+
+One orchestrator serves dense / MoE / SSM / hybrid / VLM configs:
+
+  * layers are grouped by the config's block `pattern` (e.g. gemma2
+    (local, global), recurrentgemma (rglru, rglru, local), llama4
+    (chunked×3, global)); a `lax.scan` walks the n_layers//period groups
+    with stacked params — HLO size is O(period), not O(depth), which is
+    what keeps the 80-layer 72 B dry-run lowerable;
+  * a tail of n_layers % period layers (e.g. recurrentgemma's trailing
+    (r, r)) is unrolled after the scan with its own params;
+  * remat (`cfg.remat == "block"`) checkpoints each scan group;
+  * decode threads a cache pytree through the same structure — ring
+    buffers for local/chunked attention (capacity = window), full buffers
+    for global attention, O(1) states for rwkv/rglru blocks.
+
+Mesh-divisibility padding (the paper's "redundant units are zero-padded"
+move, applied to heads/vocab) is computed in `Dims`; padding waste is
+deliberately visible in the MODEL_FLOPS/HLO_FLOPs roofline ratio.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, pad_up
+from repro.core.spe import SPEConfig
+from repro.dist.sharding import constrain
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import rwkv6 as RWKV
+from repro.models.layers import (
+    apply_rope,
+    embed_apply,
+    embed_init,
+    ffn_apply,
+    ffn_init,
+    linear_apply,
+    linear_init,
+    norm_apply,
+    norm_init,
+    softcap,
+)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-divisibility padding
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Dims:
+    """Physical (padded) dimensions for a given TP degree."""
+
+    tp: int
+    n_heads: int
+    n_kv: int
+    vocab: int
+    d_ff: int
+
+    @staticmethod
+    def create(cfg: ArchConfig, tp: int = 1) -> "Dims":
+        if not cfg.use_tp:
+            tp = 1
+        n_heads = pad_up(cfg.n_heads, tp)
+        if cfg.kv_mode == "pad" and tp > 1:
+            n_kv = pad_up(cfg.n_kv_heads, min(tp, pad_up(cfg.n_heads, tp)))
+        else:
+            n_kv = cfg.n_kv_heads
+        # keep GQA grouping consistent: heads must divide evenly over kv
+        while n_heads % n_kv:
+            n_kv += 1 if cfg.kv_mode == "pad" else -1
+        return Dims(
+            tp=tp,
+            n_heads=n_heads,
+            n_kv=n_kv,
+            vocab=pad_up(cfg.vocab, max(tp, 128)),
+            d_ff=pad_up(cfg.d_ff, tp),
+        )
+
+
+def compute_dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def spe_config(cfg: ArchConfig) -> Optional[SPEConfig]:
+    if cfg.spe_bits is None and not cfg.spe_sparse:
+        return None
+    return SPEConfig(
+        bits=cfg.spe_bits or 8,
+        group_size=cfg.spe_group,
+        keep=cfg.spe_keep,
+        sparse=cfg.spe_sparse,
+        quantized=cfg.spe_bits is not None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Attention block
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key: jax.Array, cfg: ArchConfig, dims: Dims) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": linear_init(k1, d, dims.n_heads * hd, bias=cfg.qkv_bias),
+        "wk": linear_init(k2, d, dims.n_kv * hd, bias=cfg.qkv_bias),
+        "wv": linear_init(k3, d, dims.n_kv * hd, bias=cfg.qkv_bias),
+        "wo": linear_init(k4, dims.n_heads * hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init("rmsnorm", hd)
+        p["k_norm"] = norm_init("rmsnorm", hd)
+    return p
+
+
+def _qkv(p, x, pos, cfg, dims, spe, dtype):
+    b = x.shape[0]
+    s = x.shape[1]
+    hd = cfg.hd
+    q = linear_apply(p["wq"], x, spe=spe, dtype=dtype).reshape(
+        b, s, dims.n_heads, hd
+    )
+    k = linear_apply(p["wk"], x, spe=spe, dtype=dtype).reshape(
+        b, s, dims.n_kv, hd
+    )
+    v = linear_apply(p["wv"], x, spe=spe, dtype=dtype).reshape(
+        b, s, dims.n_kv, hd
+    )
+    if cfg.qk_norm:
+        q = norm_apply("rmsnorm", p["q_norm"], q)
+        k = norm_apply("rmsnorm", p["k_norm"], k)
+    q = apply_rope(q, pos, theta=cfg.rope_theta, sections=cfg.mrope_sections)
+    k = apply_rope(k, pos, theta=cfg.rope_theta, sections=cfg.mrope_sections)
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+    return q, k, v
+
+
+def attn_apply_train(
+    p: dict, x: jax.Array, pos: jax.Array, cfg: ArchConfig, dims: Dims,
+    kind: str, *, spe, dtype,
+) -> jax.Array:
+    q, k, v = _qkv(p, x, pos, cfg, dims, spe, dtype)
+    out = A.attention(
+        q, k, v, kind=kind, window=cfg.window, cap=cfg.attn_softcap,
+        causal=True, block_q=cfg.attn_block, block_k=cfg.attn_block,
+    )
+    b, s = x.shape[:2]
+    return linear_apply(
+        p["wo"], out.reshape(b, s, dims.n_heads * cfg.hd), spe=spe,
+        dtype=dtype,
+    )
+
+
+def cache_capacity(cfg: ArchConfig, kind: str, max_seq: int) -> int:
+    if kind in ("local", "chunked") and cfg.window:
+        return min(cfg.window, max_seq)
+    return max_seq
+
+
+def attn_cache_init(
+    cfg: ArchConfig, dims: Dims, kind: str, batch: int, max_seq: int,
+    dtype,
+) -> dict:
+    cap = cache_capacity(cfg, kind, max_seq)
+    if cfg.kv_quant_bits == 8:
+        # int8 KV (per-slot-per-head symmetric scales): halves the decode
+        # memory-roofline term vs bf16 — the paper's quantized-storage
+        # idea applied to the tensor that dominates LM decode traffic.
+        return {
+            "k": jnp.zeros((batch, cap, dims.n_kv, cfg.hd), jnp.int8),
+            "v": jnp.zeros((batch, cap, dims.n_kv, cfg.hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, cap, dims.n_kv), jnp.float32),
+            "v_scale": jnp.zeros((batch, cap, dims.n_kv), jnp.float32),
+            "slot_pos": jnp.full((batch, cap), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, cap, dims.n_kv, cfg.hd), dtype),
+        "v": jnp.zeros((batch, cap, dims.n_kv, cfg.hd), dtype),
+        "slot_pos": jnp.full((batch, cap), -1, jnp.int32),
+    }
+
+
+def _kv_quant(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(B, S, Kv, hd) -> (int8 values, (B, S, Kv) f32 scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def attn_apply_decode(
+    p: dict, x: jax.Array, pos: jax.Array, cache: dict, cfg: ArchConfig,
+    dims: Dims, kind: str, *, spe, dtype,
+) -> tuple[jax.Array, dict]:
+    """x (B,1,D); pos (B,) absolute positions. Ring-buffer cache update."""
+    b = x.shape[0]
+    rope_pos = pos[:, None]  # (B,1)
+    if cfg.mrope_sections:
+        rope_pos = jnp.broadcast_to(
+            pos[:, None, None], (b, len(cfg.mrope_sections), 1)
+        )
+    q, k, v = _qkv(p, x, rope_pos, cfg, dims, spe, dtype)
+    cap = cache["k"].shape[1]
+    slot = (pos % cap).astype(jnp.int32)  # (B,)
+    bidx = jnp.arange(b)
+    slot_pos = cache["slot_pos"].at[bidx, slot].set(pos.astype(jnp.int32))
+    if cfg.kv_quant_bits == 8:
+        kq, ks = _kv_quant(k)
+        vq, vs = _kv_quant(v)
+        k_cache = cache["k"].at[bidx, slot].set(kq[:, 0])
+        v_cache = cache["v"].at[bidx, slot].set(vq[:, 0])
+        k_scale = cache["k_scale"].at[bidx, slot].set(ks[:, 0])
+        v_scale = cache["v_scale"].at[bidx, slot].set(vs[:, 0])
+        out = A.attention_decode(
+            q[:, 0], k_cache, v_cache, slot_pos, pos, kind=kind,
+            window=cfg.window, cap=cfg.attn_softcap,
+            k_scale=k_scale, v_scale=v_scale,
+        )
+        new_cache = {"k": k_cache, "v": v_cache, "k_scale": k_scale,
+                     "v_scale": v_scale, "slot_pos": slot_pos}
+    else:
+        k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
+        v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
+        out = A.attention_decode(
+            q[:, 0], k_cache, v_cache, slot_pos, pos, kind=kind,
+            window=cfg.window, cap=cfg.attn_softcap,
+        )
+        new_cache = {"k": k_cache, "v": v_cache, "slot_pos": slot_pos}
+    y = linear_apply(
+        p["wo"], out.reshape(b, 1, dims.n_heads * cfg.hd), spe=spe,
+        dtype=dtype,
+    )
+    return y, new_cache
+
+
+def attn_cache_from_prefill(
+    k: jax.Array, v: jax.Array, cfg: ArchConfig, kind: str, max_seq: int
+) -> dict:
+    """Build the ring cache state equivalent to having decoded 0..S-1."""
+    b, s = k.shape[:2]
+    cap = cache_capacity(cfg, kind, max_seq)
+    sp = jnp.full((b, cap), -1, jnp.int32)
+    n = min(s, cap)
+    tail = jnp.arange(s - n, s)
+    slots = tail % cap
+    sp = sp.at[:, slots].set(
+        jnp.broadcast_to(tail, (b, n)).astype(jnp.int32)
+    )
+    if cfg.kv_quant_bits == 8:
+        kq, ks = _kv_quant(k)
+        vq, vs = _kv_quant(v)
+        kc = jnp.zeros((b, cap, *k.shape[2:]), jnp.int8)
+        vc = jnp.zeros_like(kc)
+        ksc = jnp.zeros((b, cap, k.shape[2]), jnp.float32)
+        vsc = jnp.zeros_like(ksc)
+        return {
+            "k": kc.at[:, slots].set(kq[:, tail]),
+            "v": vc.at[:, slots].set(vq[:, tail]),
+            "k_scale": ksc.at[:, slots].set(ks[:, tail]),
+            "v_scale": vsc.at[:, slots].set(vs[:, tail]),
+            "slot_pos": sp,
+        }
+    kc = jnp.zeros((b, cap, *k.shape[2:]), k.dtype)
+    vc = jnp.zeros_like(kc)
+    kc = kc.at[:, slots].set(k[:, tail])
+    vc = vc.at[:, slots].set(v[:, tail])
+    return {"k": kc, "v": vc, "slot_pos": sp}
+
+
+# ---------------------------------------------------------------------------
+# Block = (norms + mixer + ffn/moe), dispatched on kind
+# ---------------------------------------------------------------------------
+
+
+def block_init(key: jax.Array, cfg: ArchConfig, dims: Dims, kind: str) -> dict:
+    d = cfg.d_model
+    if kind == "rwkv":
+        return {"rwkv": RWKV.rwkv_init(key, d, dims.d_ff, cfg.rwkv_head_dim)}
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"ln1": norm_init(cfg.norm, d), "ln2": norm_init(cfg.norm, d)}
+    if cfg.sandwich_norm:
+        p["post_ln1"] = norm_init(cfg.norm, d)
+        p["post_ln2"] = norm_init(cfg.norm, d)
+    if kind == "rglru":
+        p["mix"] = RG.rglru_init(k1, d, cfg.lru_dim, cfg.conv_width)
+    else:
+        p["mix"] = attn_init(k1, cfg, dims)
+    if cfg.moe is not None:
+        p["moe"] = MOE.moe_init(k2, d, cfg.moe)
+    else:
+        p["ffn"] = ffn_init(k3, d, dims.d_ff, act=cfg.act)
+    return p
+
+
+def block_apply(
+    p: dict,
+    h: jax.Array,
+    pos: jax.Array,
+    cfg: ArchConfig,
+    dims: Dims,
+    kind: str,
+    *,
+    cache: Optional[dict] = None,
+    spe=None,
+    dtype=jnp.bfloat16,
+) -> tuple[jax.Array, jax.Array, Optional[dict]]:
+    """Returns (h, moe_aux, new_cache)."""
+    if kind == "rwkv":
+        rc = cache["rwkv"] if cache else None
+        h, nc = RWKV.block_apply(
+            p["rwkv"], h, cfg.rwkv_head_dim, cache=rc, spe=spe, dtype=dtype
+        )
+        return h, jnp.zeros((), jnp.float32), {"rwkv": nc}
+
+    new_cache: dict = {}
+    a_in = norm_apply(cfg.norm, p["ln1"], h)
+    if kind == "rglru":
+        rc = cache["rglru"] if cache else None
+        mixed, nc = RG.rglru_apply(
+            p["mix"], a_in, cache=rc, spe=spe, dtype=dtype
+        )
+        new_cache["rglru"] = nc
+    elif cache is not None:
+        mixed, nc = attn_apply_decode(
+            p["mix"], a_in, pos, cache["attn"], cfg, dims, kind,
+            spe=spe, dtype=dtype,
+        )
+        new_cache["attn"] = nc
+    else:
+        train_pos = pos
+        mixed = attn_apply_train(
+            p["mix"], a_in, train_pos, cfg, dims, kind, spe=spe, dtype=dtype
+        )
+    if cfg.sandwich_norm:
+        mixed = norm_apply(cfg.norm, p["post_ln1"], mixed)
+    h = h + mixed
+
+    f_in = norm_apply(cfg.norm, p["ln2"], h)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        f_out, aux = MOE.moe_apply(p["moe"], f_in, cfg.moe, dtype=dtype)
+    else:
+        f_out = ffn_apply(p["ffn"], f_in, act=cfg.act, spe=spe, dtype=dtype)
+    if cfg.sandwich_norm:
+        f_out = norm_apply(cfg.norm, p["post_ln2"], f_out)
+    h = h + f_out
+    return h, aux, (new_cache if cache is not None else None)
+
+
+def block_cache_init(
+    cfg: ArchConfig, dims: Dims, kind: str, batch: int, max_seq: int, dtype
+) -> dict:
+    d = cfg.d_model
+    if kind == "rwkv":
+        h = cfg.rwkv_heads
+        hd = cfg.rwkv_head_dim
+        return {
+            "rwkv": {
+                "tm_shift": jnp.zeros((batch, 1, d), dtype),
+                "cm_shift": jnp.zeros((batch, 1, d), dtype),
+                "state": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            }
+        }
+    if kind == "rglru":
+        return {
+            "rglru": {
+                "h": jnp.zeros((batch, cfg.lru_dim), jnp.float32),
+                "conv": jnp.zeros(
+                    (batch, cfg.conv_width - 1, cfg.lru_dim), dtype
+                ),
+            }
+        }
+    return {"attn": attn_cache_init(cfg, dims, kind, batch, max_seq, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Full stack
+# ---------------------------------------------------------------------------
+
+
+def stack_init(key: jax.Array, cfg: ArchConfig, dims: Dims) -> dict:
+    keys = jax.random.split(key, 4 + cfg.period + len(cfg.tail))
+    params: dict[str, Any] = {
+        "embed": embed_init(keys[0], dims.vocab, cfg.d_model),
+        "final_norm": norm_init(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = linear_init(
+            keys[1], cfg.d_model, dims.vocab
+        )
+    blocks = {}
+    for p_idx, kind in enumerate(cfg.pattern):
+        gkeys = jax.random.split(keys[2 + p_idx], cfg.n_groups)
+        blocks[f"pos{p_idx}"] = jax.vmap(
+            lambda kk, kind=kind: block_init(kk, cfg, dims, kind)
+        )(gkeys)
+    params["blocks"] = blocks
+    if cfg.tail:
+        params["tail"] = {
+            f"pos{i}": block_init(keys[2 + cfg.period + i], cfg, dims, kind)
+            for i, kind in enumerate(cfg.tail)
+        }
+    return params
+
+
+def _positions(cfg: ArchConfig, batch: int, seq: int) -> jax.Array:
+    pos = jnp.broadcast_to(jnp.arange(seq), (batch, seq))
+    if cfg.mrope_sections:
+        # text-stub M-RoPE: all three rows equal (== standard RoPE);
+        # the VLM frontend would supply real (t, h, w) grids here.
+        pos = jnp.broadcast_to(
+            pos[:, None, :], (batch, len(cfg.mrope_sections), seq)
+        )
+    return pos
+
+
+def forward_train(
+    params: dict,
+    tokens: jax.Array,  # (B, S)
+    cfg: ArchConfig,
+    dims: Dims,
+    *,
+    positions: Optional[jax.Array] = None,
+    return_hidden: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits (B,S,V_padded) f32, moe_aux) — or the post-norm
+    hidden states (B,S,D) when return_hidden (chunked-CE path)."""
+    dtype = compute_dtype(cfg)
+    spe = spe_config(cfg)
+    b, s = tokens.shape
+    pos = positions if positions is not None else _positions(cfg, b, s)
+    h = embed_apply(params["embed"], tokens, dtype=dtype,
+                    scale=cfg.scale_embed)
+    h = constrain(h, "dp", "tp", None)  # SP: S over model axis
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def group_body(carry, gp):
+        h, aux = carry
+        h = constrain(h, "dp", "tp", None)  # SP: S over model axis
+        for p_idx, kind in enumerate(cfg.pattern):
+            h, a, _ = block_apply(
+                gp[f"pos{p_idx}"], h, pos, cfg, dims, kind,
+                spe=spe, dtype=dtype,
+            )
+            aux = aux + a
+        return (h, aux), None
+
+    body = group_body
+    if cfg.remat == "block":
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    (h, aux), _ = jax.lax.scan(body, (h, aux0), params["blocks"])
+    for i, kind in enumerate(cfg.tail):
+        h, a, _ = block_apply(
+            params["tail"][f"pos{i}"], h, pos, cfg, dims, kind,
+            spe=spe, dtype=dtype,
+        )
+        aux = aux + a
+    h = norm_apply(cfg.norm, params["final_norm"], h)
+    if return_hidden:
+        return h, aux
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"]["w"].astype(dtype).T
+    else:
+        logits = linear_apply(params["lm_head"], h, dtype=dtype)
+    logits = constrain(logits, "dp", None, "tp")
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    logits = constrain(logits, "dp", None, "tp")
+    return logits, aux
+
+
+def loss_fn(
+    params: dict, batch: dict, cfg: ArchConfig, dims: Dims
+) -> tuple[jax.Array, dict]:
+    """Next-token CE (+ MoE aux). Targets beyond cfg.vocab never occur.
+
+    With cfg.loss_chunk > 0 the CE is evaluated in S-chunks: the lm_head
+    matmul + logsumexp run per chunk inside a scan, so live logits are
+    (B, chunk, V) instead of (B, S, V) — same FLOPs, a fraction of the
+    memory-roofline term on fat-vocab models (§Perf, whisper hillclimb).
+    """
+    if not cfg.loss_chunk:
+        logits, aux = forward_train(
+            params, batch["tokens"], cfg, dims,
+            positions=batch.get("positions"),
+        )
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        tgt = batch["targets"]
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1).mean()
+    else:
+        h, aux = forward_train(
+            params, batch["tokens"], cfg, dims,
+            positions=batch.get("positions"), return_hidden=True,
+        )
+        dtype = compute_dtype(cfg)
+        b, s, d = h.shape
+        c = min(cfg.loss_chunk, s)
+        pad = (-s) % c
+        hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        tp_ = jnp.pad(batch["targets"], ((0, 0), (0, pad)))
+        mask = jnp.pad(jnp.ones((b, s), jnp.float32), ((0, 0), (0, pad)))
+        nc = (s + pad) // c
+        resh = lambda x: jnp.moveaxis(
+            x.reshape(b, nc, c, *x.shape[2:]), 1, 0
+        )
+
+        def chunk_nll(carry, xs):
+            hc, tc, mc = xs  # (B, c, D), (B, c), (B, c)
+            if cfg.tie_embeddings:
+                lg = hc @ params["embed"]["w"].astype(dtype).T
+            else:
+                lg = linear_apply(params["lm_head"], hc, dtype=dtype)
+            lg = constrain(lg, "dp", None, "tp")
+            lg = softcap(lg.astype(jnp.float32), cfg.final_softcap)
+            lp = jax.nn.log_softmax(lg, axis=-1)
+            pick = jnp.take_along_axis(lp, tc[..., None], axis=-1)[..., 0]
+            return carry - jnp.sum(pick * mc), None
+
+        total, _ = jax.lax.scan(
+            chunk_nll, jnp.zeros((), jnp.float32),
+            (resh(hp), resh(tp_), resh(mask)),
+        )
+        nll = total / (b * s)
+    loss = nll
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_coef * aux
+    return loss, {"loss": loss, "nll": nll, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(
+    cfg: ArchConfig, dims: Dims, batch: int, max_seq: int
+) -> dict:
+    dtype = compute_dtype(cfg)
+    cache: dict[str, Any] = {"blocks": {}}
+    for p_idx, kind in enumerate(cfg.pattern):
+        one = block_cache_init(cfg, dims, kind, batch, max_seq, dtype)
+        cache["blocks"][f"pos{p_idx}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x[None], (cfg.n_groups, *x.shape)
+            ).copy(),
+            one,
+        )
+    if cfg.tail:
+        cache["tail"] = {
+            f"pos{i}": block_cache_init(cfg, dims, kind, batch, max_seq,
+                                        dtype)
+            for i, kind in enumerate(cfg.tail)
+        }
+    return cache
+
+
+def decode_step(
+    params: dict,
+    cache: dict,
+    token: jax.Array,  # (B,) int32
+    pos: jax.Array,  # (B,) int32 absolute position of `token`
+    cfg: ArchConfig,
+    dims: Dims,
+) -> tuple[jax.Array, dict]:
+    """One-token step: returns (logits (B, V_padded) f32, new cache)."""
+    dtype = compute_dtype(cfg)
+    h = embed_apply(params["embed"], token[:, None], dtype=dtype,
+                    scale=cfg.scale_embed)
+    h = constrain(h, "dp", "tp", None)  # SP: S over model axis
+
+    def group_body(h, xs):
+        gp, gc = xs
+        new_gc = {}
+        for p_idx, kind in enumerate(cfg.pattern):
+            h, _, nc = block_apply(
+                gp[f"pos{p_idx}"], h, pos, cfg, dims, kind,
+                cache=gc[f"pos{p_idx}"], spe=None, dtype=dtype,
+            )
+            new_gc[f"pos{p_idx}"] = nc
+        return h, new_gc
+
+    h, new_blocks = jax.lax.scan(
+        group_body, h, (params["blocks"], cache["blocks"])
+    )
+    new_cache: dict[str, Any] = {"blocks": new_blocks}
+    if cfg.tail:
+        new_cache["tail"] = {}
+        for i, kind in enumerate(cfg.tail):
+            h, _, nc = block_apply(
+                params["tail"][f"pos{i}"], h, pos, cfg, dims, kind,
+                cache=cache["tail"][f"pos{i}"], spe=None, dtype=dtype,
+            )
+            new_cache["tail"][f"pos{i}"] = nc
+    h = norm_apply(cfg.norm, params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"]["w"].astype(dtype).T
+    else:
+        logits = linear_apply(params["lm_head"], h, dtype=dtype)
+    logits = constrain(logits, "dp", None, "tp")
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits[:, 0], new_cache
+
+
+def prefill(
+    params: dict,
+    tokens: jax.Array,  # (B, S)
+    cfg: ArchConfig,
+    dims: Dims,
+    *,
+    max_seq: int,
+) -> tuple[jax.Array, dict]:
+    """Process a prompt, build the decode cache. Returns (last-token
+    logits (B, V_padded), cache).
+
+    Implementation: run the train forward *while also* materializing each
+    attention layer's (k, v) and each recurrent layer's final state —
+    done by running blocks in decode-free train mode but with per-block
+    cache extraction. For scan-friendliness we re-run the per-block qkv
+    on the normalized input (cheap relative to attention itself).
+    """
+    dtype = compute_dtype(cfg)
+    spe = None
+    b, s = tokens.shape
+    pos = _positions(cfg, b, s)
+    h = embed_apply(params["embed"], tokens, dtype=dtype,
+                    scale=cfg.scale_embed)
+    h = constrain(h, "dp", "tp", None)  # SP: S over model axis
+
+    def run_block(p, h, kind):
+        """Train-mode block that *also* returns its decode cache."""
+        if kind == "rwkv":
+            h2, nc = RWKV.block_apply(
+                p["rwkv"], h, cfg.rwkv_head_dim, spe=spe, dtype=dtype
+            )
+            return h2, {"rwkv": nc}
+        a_in = norm_apply(cfg.norm, p["ln1"], h)
+        if kind == "rglru":
+            mixed, nc = RG.rglru_apply(p["mix"], a_in, spe=spe, dtype=dtype)
+            cache_out = {"rglru": nc}
+        else:
+            q, k, v = _qkv(p["mix"], a_in, pos, cfg, dims, spe, dtype)
+            out = A.attention(
+                q, k, v, kind=kind, window=cfg.window,
+                cap=cfg.attn_softcap, causal=True,
+                block_q=cfg.attn_block, block_k=cfg.attn_block,
+            )
+            mixed = linear_apply(
+                p["mix"]["wo"], out.reshape(b, s, dims.n_heads * cfg.hd),
+                spe=spe, dtype=dtype,
+            )
+            cache_out = {
+                "attn": attn_cache_from_prefill(k, v, cfg, kind, max_seq)
+            }
+        if cfg.sandwich_norm:
+            mixed = norm_apply(cfg.norm, p["post_ln1"], mixed)
+        h = h + mixed
+        f_in = norm_apply(cfg.norm, p["ln2"], h)
+        if cfg.moe is not None:
+            f_out, _ = MOE.moe_apply(p["moe"], f_in, cfg.moe, dtype=dtype)
+        else:
+            f_out = ffn_apply(p["ffn"], f_in, act=cfg.act, spe=spe,
+                              dtype=dtype)
+        if cfg.sandwich_norm:
+            f_out = norm_apply(cfg.norm, p["post_ln2"], f_out)
+        return h + f_out, cache_out
+
+    def group_body(h, gp):
+        caches = {}
+        h = constrain(h, "dp", "tp", None)  # SP: S over model axis
+        for p_idx, kind in enumerate(cfg.pattern):
+            h, c = run_block(gp[f"pos{p_idx}"], h, kind)
+            caches[f"pos{p_idx}"] = c
+        return h, caches
+
+    h, block_caches = jax.lax.scan(group_body, h, params["blocks"])
+    cache: dict[str, Any] = {"blocks": block_caches}
+    if cfg.tail:
+        cache["tail"] = {}
+        for i, kind in enumerate(cfg.tail):
+            h, c = run_block(params["tail"][f"pos{i}"], h, kind)
+            cache["tail"][f"pos{i}"] = c
+    h = norm_apply(cfg.norm, params["final_norm"], h)
+    last = h[:, -1:]
+    if cfg.tie_embeddings:
+        logits = last @ params["embed"]["w"].astype(dtype).T
+    else:
+        logits = linear_apply(params["lm_head"], last, dtype=dtype)
+    logits = constrain(logits, "dp", None, "tp")
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits[:, 0], cache

@@ -1,0 +1,26 @@
+"""Optimizers from scratch (pytree transforms, no optax dependency)."""
+
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    adamw,
+    sgd,
+)
+from repro.optim.schedules import (
+    constant_schedule,
+    cosine_schedule,
+    linear_warmup_cosine,
+)
+from repro.optim.clip import clip_by_global_norm, global_norm
+
+__all__ = [
+    "Optimizer",
+    "adam",
+    "adamw",
+    "sgd",
+    "constant_schedule",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+    "clip_by_global_norm",
+    "global_norm",
+]

@@ -1,0 +1,35 @@
+"""Learning-rate schedules (pure functions of the step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak_lr: float, total_steps: int, *, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step / max(1, total_steps), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return peak_lr * (final_frac + (1 - final_frac) * cos)
+
+    return f
+
+
+def linear_warmup_cosine(
+    peak_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    *,
+    final_frac: float = 0.1,
+):
+    cos = cosine_schedule(peak_lr, max(1, total_steps - warmup_steps),
+                          final_frac=final_frac)
+
+    def f(step):
+        warm = peak_lr * jnp.minimum(1.0, (step + 1) / max(1, warmup_steps))
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return f

@@ -1,0 +1,5 @@
+"""Serving substrate: batched LM engine + the paper's VA diagnosis service."""
+
+from repro.serve import engine, va_service
+
+__all__ = ["engine", "va_service"]

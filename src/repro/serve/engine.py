@@ -1,0 +1,163 @@
+"""Batched serving engine: prefill + slot-based continuous decode.
+
+A fixed pool of `batch_size` decode slots runs one jitted `decode_step`
+per tick for the whole pool (decode is memory-bound: batching the pool
+amortizes the weight reads — exactly the roofline term the paper's
+compressed weights attack). Requests are admitted into free slots via
+per-request prefill; finished slots (EOS or max_tokens) are recycled.
+
+Weight-only quantization (`quantize_for_serving`) converts dense params
+to the packed mixed-bit-width format; the model's `linear_apply`
+dispatches on the format, so the same jitted decode_step serves both.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.models.layers import compile_linear_quant
+
+# param-path leaf dirs that stay dense at serve time (numerically
+# sensitive or tiny): embeddings, router, norms, rwkv adapters
+_QUANT_TARGETS = (
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+    "w_r", "w_k", "w_v", "w_g", "w_o", "cm_k", "cm_v", "cm_r",
+    "w_x", "w_out",
+)
+
+
+def quantize_for_serving(params: Any, bits: int = 8) -> Any:
+    """Dense master params -> packed mixed-bit-width serving params."""
+
+    def visit(tree, name=""):
+        if isinstance(tree, dict):
+            if "w" in tree and isinstance(tree["w"], jax.Array) and (
+                name in _QUANT_TARGETS and tree["w"].ndim in (2, 3)
+            ):
+                return compile_linear_quant(tree, bits)
+            return {k: visit(v, k) for k, v in tree.items()}
+        return tree
+
+    return visit(params)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: jax.Array  # (S,) int32
+    max_new: int = 32
+    eos: Optional[int] = None
+    # filled by the engine:
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Slot-based batched decoder around a Model."""
+
+    def __init__(self, model: Model, params: Any, *, batch_size: int,
+                 greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.batch = batch_size
+        self.greedy = greedy
+        self._decode = jax.jit(model.decode_step)
+        self._queue: list[Request] = []
+        self._slots: list[Optional[Request]] = [None] * batch_size
+        self.cache = model.init_cache(batch_size)
+        self.pos = jnp.zeros((batch_size,), jnp.int32)
+        self.tokens = jnp.zeros((batch_size,), jnp.int32)
+        self.active = jnp.zeros((batch_size,), bool)
+
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.batch):
+            if self._slots[slot] is None and self._queue:
+                req = self._queue.pop(0)
+                self._slots[slot] = req
+                # per-request prefill: replay the prompt through the
+                # pool cache via decode steps (slot-local; simple and
+                # correct — a production engine would batch prefills)
+                tok = req.prompt
+                for t in range(tok.shape[0]):
+                    self._step_single(slot, int(tok[t]), t)
+                self.pos = self.pos.at[slot].set(tok.shape[0] - 1)
+                self.tokens = self.tokens.at[slot].set(int(tok[-1]))
+                self.active = self.active.at[slot].set(True)
+
+    def _step_single(self, slot: int, token: int, pos: int) -> None:
+        toks = self.tokens.at[slot].set(token)
+        poss = self.pos.at[slot].set(pos)
+        logits, self.cache = self._decode(
+            self.params, self.cache, toks, poss
+        )
+
+    def tick(self) -> int:
+        """One decode tick for the whole pool; returns #active slots."""
+        self._admit()
+        if not any(r is not None for r in self._slots):
+            return 0
+        pos = self.pos + 1
+        logits, self.cache = self._decode(
+            self.params, self.cache, self.tokens, pos
+        )
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.pos = pos
+        self.tokens = jnp.where(self.active, nxt, self.tokens)
+        n_active = 0
+        for slot, req in enumerate(self._slots):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.output.append(tok)
+            if (req.eos is not None and tok == req.eos) or len(
+                req.output
+            ) >= req.max_new:
+                req.done = True
+                self._slots[slot] = None
+                self.active = self.active.at[slot].set(False)
+            else:
+                n_active += 1
+        return n_active
+
+    def run(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if self.tick() == 0 and not self._queue:
+                break
+
+
+def generate(
+    model: Model,
+    params: Any,
+    prompts: jax.Array,  # (B, S) int32 — same-length batch
+    *,
+    max_new: int,
+    greedy: bool = True,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Simple batched generate: one prefill + max_new decode steps.
+    Returns (B, max_new) int32."""
+    b, s = prompts.shape
+    if model.cfg.is_enc_dec:
+        raise ValueError("use generate_encdec for enc-dec models")
+    last_logits, cache = jax.jit(model.prefill)(params, prompts)
+    decode = jax.jit(model.decode_step)
+    outs = []
+    tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    for t in range(max_new):
+        outs.append(tok)
+        pos = jnp.full((b,), s + t, jnp.int32)
+        logits, cache = decode(params, cache, tok, pos)
+        if greedy or key is None:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits).astype(jnp.int32)
+    return jnp.stack(outs, axis=1)

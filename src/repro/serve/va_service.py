@@ -1,0 +1,68 @@
+"""The paper's deployment: VA diagnosis service (6-segment voting).
+
+Mirrors the demo pipeline: IEGM recordings stream in, each 512-sample
+segment is classified by the compiled accelerator program (software twin
+of the chip), and every 6 segments are aggregated by majority vote into a
+diagnosis. Latency accounting uses the chip perf model, so the service
+reports the same numbers the silicon measurement section does.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compiler, vadetect
+from repro.core.perf_model import ChipReport
+
+
+@dataclasses.dataclass
+class Diagnosis:
+    patient: int
+    is_va: bool
+    segment_preds: list[int]
+    chip_latency_us: float
+
+
+class VAService:
+    """Batched VA diagnosis over compiled accelerator programs."""
+
+    def __init__(
+        self,
+        program: compiler.AcceleratorProgram,
+        cfg: vadetect.VAConfig = vadetect.VAConfig(),
+        *,
+        path: str = "reference",
+    ):
+        self.program = program
+        self.cfg = cfg
+        self.path = path
+        self._infer = jax.jit(
+            lambda x: jnp.argmax(
+                compiler.execute(program, x, cfg, path=path), axis=-1
+            )
+        )
+
+    @property
+    def report(self) -> ChipReport:
+        return self.program.report
+
+    def diagnose_batch(self, recordings: jax.Array) -> list[Diagnosis]:
+        """recordings (P, 6, 512) -> one Diagnosis per patient."""
+        p, s, t = recordings.shape
+        assert s == vadetect.VOTE_SEGMENTS, s
+        preds = self._infer(recordings.reshape(p * s, t)).reshape(p, s)
+        votes = vadetect.vote(preds)
+        lat = self.report.latency_s * 1e6 * s  # 6 inferences per diagnosis
+        return [
+            Diagnosis(
+                patient=i,
+                is_va=bool(votes[i]),
+                segment_preds=[int(x) for x in preds[i]],
+                chip_latency_us=lat,
+            )
+            for i in range(p)
+        ]

@@ -1,0 +1,5 @@
+"""Training substrate: trainer, checkpointing, fault tolerance."""
+
+from repro.train import checkpoint, fault, trainer
+
+__all__ = ["checkpoint", "fault", "trainer"]

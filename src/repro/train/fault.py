@@ -1,0 +1,139 @@
+"""Fault tolerance: retrying step loop + straggler watchdog.
+
+SPMD-correct strategy at scale: a failed/slow host cannot be healed
+inside a jitted step, so the recovery unit is the *job step*:
+  1. every step is deterministic given (checkpoint, step index) — the
+     data pipeline addresses batches by step (`data.*.batch_at`);
+  2. on failure, reload the latest checkpoint and replay from there
+     (`run_training` below does exactly this, with bounded retries);
+  3. the straggler watchdog tracks per-step wall time; hosts exceeding
+     `threshold x median` are flagged — at scale the controller would
+     checkpoint + reconfigure the mesh without the slow host (elastic
+     restore makes the reconfigured mesh a free operation).
+
+`FaultInjector` provides deterministic failures for the tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import statistics
+import time
+from typing import Any, Callable, Optional
+
+logger = logging.getLogger("repro.fault")
+
+
+class FaultInjector:
+    """Raises RuntimeError on the given (1-based occurrence) step calls."""
+
+    def __init__(self, fail_at: set[int]):
+        self.fail_at = set(fail_at)
+        self.calls = 0
+        self.failures = 0
+
+    def __call__(self, step: int) -> None:
+        self.calls += 1
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            self.failures += 1
+            raise RuntimeError(f"injected fault at step {step}")
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """Flags steps slower than `threshold` x running median."""
+
+    threshold: float = 3.0
+    window: int = 50
+    times: list = dataclasses.field(default_factory=list)
+    flagged: list = dataclasses.field(default_factory=list)
+
+    def record(self, step: int, dt: float) -> bool:
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        if len(self.times) >= 5:
+            med = statistics.median(self.times)
+            if dt > self.threshold * med:
+                self.flagged.append((step, dt, med))
+                logger.warning(
+                    "straggler: step %d took %.3fs (median %.3fs)",
+                    step, dt, med,
+                )
+                return True
+        return False
+
+
+def run_training(
+    train_step: Callable[[Any, Any], tuple[Any, dict]],
+    state: Any,
+    batch_at: Callable[[int], Any],
+    *,
+    num_steps: int,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 50,
+    keep: int = 3,
+    max_retries: int = 3,
+    fault_hook: Optional[Callable[[int], None]] = None,
+    watchdog: Optional[StragglerWatchdog] = None,
+    log_every: int = 10,
+    metrics_cb: Optional[Callable[[int, dict], None]] = None,
+) -> tuple[Any, list[dict]]:
+    """Checkpoint-restart training loop.
+
+    Deterministic replay contract: `batch_at(step)` must return the same
+    batch for the same step on every host/retry. Returns (final_state,
+    metric history).
+    """
+    from repro.train import checkpoint as ckpt
+
+    import jax
+
+    step = 0
+    if ckpt_dir is not None:
+        latest = ckpt.latest_step(ckpt_dir)
+        if latest is not None:
+            state, step = ckpt.restore(ckpt_dir, state, step=latest)
+            logger.info("resumed from checkpoint step %d", step)
+
+    history: list[dict] = []
+    retries = 0
+    while step < num_steps:
+        t0 = time.monotonic()
+        try:
+            if fault_hook is not None:
+                fault_hook(step)
+            batch = batch_at(step)
+            state, metrics = train_step(state, batch)
+            jax.block_until_ready(metrics)
+        except Exception as e:  # noqa: BLE001 — the recovery path
+            retries += 1
+            logger.warning("step %d failed (%s); retry %d/%d",
+                           step, e, retries, max_retries)
+            if retries > max_retries:
+                raise
+            if ckpt_dir is not None:
+                latest = ckpt.latest_step(ckpt_dir)
+                if latest is not None:
+                    state, step = ckpt.restore(ckpt_dir, state, step=latest)
+            continue
+        retries = 0
+        dt = time.monotonic() - t0
+        if watchdog is not None:
+            watchdog.record(step, dt)
+        m = {k: float(v) for k, v in metrics.items()}
+        m["step"] = step
+        m["wall_s"] = dt
+        history.append(m)
+        if metrics_cb is not None:
+            metrics_cb(step, m)
+        if log_every and step % log_every == 0:
+            logger.info("step %d: %s", step, m)
+        step += 1
+        if ckpt_dir is not None and step % ckpt_every == 0:
+            ckpt.save(state, ckpt_dir, step, keep=keep)
+    if ckpt_dir is not None:
+        ckpt.save(state, ckpt_dir, step, keep=keep)
+    return state, history

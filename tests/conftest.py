@@ -1,0 +1,11 @@
+import os
+import sys
+
+# NOTE: deliberately NOT setting --xla_force_host_platform_device_count
+# here — the dry-run (and only the dry-run) uses 512 fake devices; tests
+# and benchmarks must see the host's real single device.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,98 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps (interpret)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant as Q
+from repro.core import sparsity as S
+from repro.kernels import ops, ref
+
+G, KEEP = 16, 8
+CFG = S.SparsityConfig(G, KEEP)
+
+
+def _compressed(key, k, n, bits=8):
+    w = jax.random.normal(key, (k, n))
+    values, select = S.compress(S.apply_prune(w, CFG), CFG)
+    q, scale = Q.quantize(values, Q.QuantConfig(bits=bits))
+    return q, select, scale.reshape(1, -1)
+
+
+@pytest.mark.parametrize("m,k,n", [(4, 32, 8), (16, 64, 24), (130, 256, 130),
+                                   (1, 16, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_nm_spmm_sweep(m, k, n, dtype):
+    q, select, scale = _compressed(jax.random.PRNGKey(m * 7 + n), k, n)
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k), dtype)
+    y = ops.nm_spmm(x, q, select, scale, group_size=G, keep=KEEP)
+    y_ref = ref.nm_spmm_ref(x, q, select, scale, group_size=G, keep=KEEP)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(y, y_ref, rtol=tol, atol=tol)
+
+
+def test_nm_spmm_batched_input():
+    q, select, scale = _compressed(jax.random.PRNGKey(0), 64, 12)
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 5, 64))
+    y = ops.nm_spmm(x, q, select, scale, group_size=G, keep=KEEP)
+    assert y.shape == (3, 5, 12)
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2, 1])
+@pytest.mark.parametrize("m,k,n", [(8, 64, 16), (33, 128, 40)])
+def test_bitserial_and_quant_matmul_sweep(bits, m, k, n):
+    w = jax.random.normal(jax.random.PRNGKey(bits), (k, n))
+    q, scale = Q.quantize(w, Q.QuantConfig(bits=bits))
+    packed = Q.pack_planes(q, bits)
+    x = jax.random.normal(jax.random.PRNGKey(9), (m, k))
+    y_ref = ref.bitserial_matmul_ref(
+        x, packed, scale.reshape(1, -1), bits=bits, k=k
+    )
+    y_b = ops.bitserial_matmul(x, packed, scale.reshape(1, -1), bits=bits)
+    y_q = ops.quant_matmul(x, packed, scale.reshape(1, -1), bits=bits)
+    np.testing.assert_allclose(y_b, y_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(y_q, y_ref, rtol=1e-4, atol=1e-4)
+    # and against plain dequant matmul (independent oracle)
+    np.testing.assert_allclose(
+        y_q, x @ Q.dequantize(q, scale), rtol=1e-3, atol=1e-3
+    )
+
+
+@pytest.mark.parametrize("ks,stride,c,n,t", [
+    (7, 2, 4, 16, 512),   # VA layer 0
+    (5, 2, 24, 32, 256),  # VA layer 1-ish
+    (3, 1, 32, 48, 128),
+    (1, 1, 96, 2, 16),    # 1x1 head
+])
+def test_sparse_conv1d_sweep(ks, stride, c, n, t):
+    k_dense = -(-(ks * c) // G) * G
+    q, select, scale = _compressed(jax.random.PRNGKey(ks), k_dense, n)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, t, c))
+    y = ops.sparse_conv1d(
+        x, q, select, scale, ksize=ks, stride=stride, group_size=G,
+        keep=KEEP,
+    )
+    y_ref = ref.sparse_conv1d_ref(
+        x, q, select, scale, ksize=ks, stride=stride, group_size=G,
+        keep=KEEP,
+    )
+    assert y.shape == ((2, (t - 1) // stride + 1, n))
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    groups=st.integers(1, 4),
+    n=st.integers(1, 20),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_nm_spmm_property(m, groups, n, seed):
+    k = groups * G
+    q, select, scale = _compressed(jax.random.PRNGKey(seed), k, n)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (m, k))
+    y = ops.nm_spmm(x, q, select, scale, group_size=G, keep=KEEP)
+    y_ref = ref.nm_spmm_ref(x, q, select, scale, group_size=G, keep=KEEP)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,118 @@
+"""Beyond-paper optimization knobs (§Perf): exactness/closeness checks."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import api
+
+
+def _params_and_batch(cfg, S=16, B=2):
+    model = api.build_model(cfg, tp=1, max_seq=2 * S + 8)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (B, S), 0, cfg.vocab),
+        "targets": jax.random.randint(
+            jax.random.PRNGKey(2), (B, S), 0, cfg.vocab),
+    }
+    return model, params, batch
+
+
+@pytest.mark.parametrize("chunk", [4, 5, 16])
+def test_chunked_ce_exact(chunk):
+    cfg = configs.reduced("qwen3_8b")
+    m1, params, batch = _params_and_batch(cfg)
+    m2 = api.build_model(
+        dataclasses.replace(cfg, loss_chunk=chunk), tp=1, max_seq=40
+    )
+    l1, _ = m1.loss(params, batch)
+    l2, _ = m2.loss(params, batch)
+    np.testing.assert_allclose(l1, l2, rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_ce_grads_match():
+    cfg = configs.reduced("qwen3_8b")
+    m1, params, batch = _params_and_batch(cfg)
+    m2 = api.build_model(
+        dataclasses.replace(cfg, loss_chunk=8), tp=1, max_seq=40
+    )
+    g1 = jax.grad(lambda p: m1.loss(p, batch)[0])(params)
+    g2 = jax.grad(lambda p: m2.loss(p, batch)[0])(params)
+    num = sum(float(jnp.abs(a - b).sum())
+              for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)))
+    den = sum(float(jnp.abs(a).sum()) for a in jax.tree.leaves(g1))
+    assert num / den < 0.01
+
+
+def test_int8_kv_cache_decode_close():
+    cfg = configs.reduced("qwen3_8b")
+    m1, params, _ = _params_and_batch(cfg)
+    mk = api.build_model(
+        dataclasses.replace(cfg, kv_quant_bits=8), tp=1, max_seq=40
+    )
+    S, B = 12, 2
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab)
+    _, cd = m1.prefill(params, toks)
+    _, ck = mk.prefill(params, toks)
+    assert ck["blocks"]["pos0"]["attn"]["k"].dtype == jnp.int8
+    newt = jax.random.randint(jax.random.PRNGKey(4), (B, 3), 0, cfg.vocab)
+    for t in range(3):
+        pos = jnp.full((B,), S + t, jnp.int32)
+        ld, cd = m1.decode_step(params, cd, newt[:, t], pos)
+        lk, ck = mk.decode_step(params, ck, newt[:, t], pos)
+        rel = float(jnp.abs(ld - lk).max()) / (
+            float(jnp.abs(ld).std()) + 1e-9
+        )
+        assert rel < 0.3, rel
+
+
+def test_int8_kv_cache_bytes_halved():
+    cfg = configs.reduced("qwen3_8b")
+    mk = api.build_model(
+        dataclasses.replace(cfg, kv_quant_bits=8), tp=1, max_seq=64
+    )
+    m1 = api.build_model(cfg, tp=1, max_seq=64)
+    def nbytes(t):
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t))
+    c1 = jax.eval_shape(lambda: m1.init_cache(4))
+    ck = jax.eval_shape(lambda: mk.init_cache(4))
+    r = nbytes(ck) / nbytes(c1)
+    # int8 halves the k/v payload; per-slot f32 scales add 4/hd (25% at
+    # the reduced hd=16, ~3% at production hd=128)
+    hd = cfg.hd
+    expected_kv = (1 + 4 / hd) / 2
+    assert r < expected_kv + 0.15, (r, expected_kv)
+
+
+def test_moe_tp_only_sharding_rule():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist import sharding as shd
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = configs.reduced("olmoe_1b_7b")
+    cfg_tp = dataclasses.replace(cfg, moe_shard="tp_only")
+    s1 = shd.spec_for_path("blocks/pos0/moe/w_gate", (2, 8, 64, 64),
+                           cfg, mesh)
+    s2 = shd.spec_for_path("blocks/pos0/moe/w_gate", (2, 8, 64, 64),
+                           cfg_tp, mesh)
+    assert s1 == P(None, None, "data", "model")
+    assert s2 == P(None, None, None, "model")
+
+
+def test_moe_tp_only_trains_identically():
+    """moe_shard is a sharding-only knob: numerics must be unchanged."""
+    cfg = configs.reduced("olmoe_1b_7b")
+    m1, params, batch = _params_and_batch(cfg)
+    m2 = api.build_model(
+        dataclasses.replace(cfg, moe_shard="tp_only"), tp=1, max_seq=40
+    )
+    l1, _ = m1.loss(params, batch)
+    l2, _ = m2.loss(params, batch)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6, atol=1e-6)

@@ -1,0 +1,88 @@
+"""core.quant — mixed-bit-width quantization + bit-plane (CMUL) math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant as Q
+
+BITS = [1, 2, 4, 8]
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_quantize_roundtrip_range(bits):
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    cfg = Q.QuantConfig(bits=bits)
+    q, scale = Q.quantize(w, cfg)
+    assert q.dtype == jnp.int8
+    assert int(q.max()) <= cfg.qmax and int(q.min()) >= cfg.qmin
+    deq = Q.dequantize(q, scale)
+    # max quantization error bounded by scale/2 per channel (bits>1)
+    if bits > 1:
+        err = jnp.abs(deq - w)
+        assert float((err - scale / 2).max()) < 1e-5
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_bitplane_roundtrip(bits):
+    w = jax.random.normal(jax.random.PRNGKey(1), (48, 16))
+    q, _ = Q.quantize(w, Q.QuantConfig(bits=bits))
+    planes = Q.to_bitplanes(q, bits)
+    assert planes.shape == (bits if bits > 1 else 1, 48, 16)
+    back = Q.from_bitplanes(planes, bits)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q, np.int32))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_pack_unpack_roundtrip(bits):
+    w = jax.random.normal(jax.random.PRNGKey(2), (33, 20))  # odd K
+    q, _ = Q.quantize(w, Q.QuantConfig(bits=bits))
+    packed = Q.pack_planes(q, bits)
+    assert packed.dtype == jnp.uint8
+    back = Q.unpack_planes(packed, bits, 33)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_bitserial_equals_dense(bits):
+    """CMUL shift-accumulate == dequant matmul (the chip's core claim)."""
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (64, 24))
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 64))
+    q, scale = Q.quantize(w, Q.QuantConfig(bits=bits))
+    y_bits = Q.bitserial_matmul_exact(x, q, bits)
+    y_dense = x @ q.astype(jnp.float32)
+    np.testing.assert_allclose(y_bits, y_dense, rtol=1e-5, atol=1e-4)
+
+
+def test_fake_quant_ste_gradient():
+    w = jax.random.normal(jax.random.PRNGKey(5), (32, 8))
+    g = jax.grad(lambda w: jnp.sum(Q.fake_quant(w, 8, True) * 2.0))(w)
+    np.testing.assert_allclose(g, jnp.full_like(w, 2.0))
+
+
+def test_fake_quant_idempotent():
+    w = jax.random.normal(jax.random.PRNGKey(6), (32, 8))
+    w1 = Q.fake_quant(w, 8, True)
+    w2 = Q.fake_quant(w1, 8, True)
+    np.testing.assert_allclose(w1, w2, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.sampled_from(BITS),
+    k=st.integers(4, 64),
+    n=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_unpack_property(bits, k, n, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n))
+    q, _ = Q.quantize(w, Q.QuantConfig(bits=bits))
+    back = Q.unpack_planes(Q.pack_planes(q, bits), bits, k)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+def test_storage_bits():
+    assert Q.storage_bits((64, 32), 4) == 64 * 32 * 4

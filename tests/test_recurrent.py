@@ -1,0 +1,108 @@
+"""RWKV-6 chunked==stepwise; RG-LRU associative-scan==stepwise."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import rglru, rwkv6
+
+
+def test_wkv_chunked_equals_step():
+    B, S, H, hd = 2, 32, 2, 8
+    key = jax.random.PRNGKey(0)
+    r, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, S, H, hd))
+               for i in range(3))
+    lw = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 3),
+                                    (B, S, H, hd)) * 0.5)
+    u = jax.random.normal(jax.random.fold_in(key, 4), (H, hd)) * 0.1
+    st0 = jnp.zeros((B, H, hd, hd))
+    o_chunk, st_chunk = rwkv6.wkv_chunked(r, k, v, lw, u, st0)
+    st = st0
+    outs = []
+    for t in range(S):
+        o, st = rwkv6.wkv_step(r[:, t], k[:, t], v[:, t], lw[:, t], u, st)
+        outs.append(o)
+    o_step = jnp.stack(outs, 1)
+    np.testing.assert_allclose(o_chunk, o_step, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(st_chunk, st, rtol=1e-4, atol=1e-4)
+
+
+def test_wkv_carries_state_across_calls():
+    """Two half-sequences with carried state == one full sequence."""
+    B, S, H, hd = 1, 32, 2, 8
+    key = jax.random.PRNGKey(1)
+    r, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, S, H, hd))
+               for i in range(3))
+    lw = -jnp.exp(jnp.zeros((B, S, H, hd)) - 1.0)
+    u = jnp.zeros((H, hd))
+    st0 = jnp.zeros((B, H, hd, hd))
+    full, _ = rwkv6.wkv_chunked(r, k, v, lw, u, st0)
+    h = S // 2
+    first, st_mid = rwkv6.wkv_chunked(
+        r[:, :h], k[:, :h], v[:, :h], lw[:, :h], u, st0
+    )
+    second, _ = rwkv6.wkv_chunked(
+        r[:, h:], k[:, h:], v[:, h:], lw[:, h:], u, st_mid
+    )
+    np.testing.assert_allclose(
+        jnp.concatenate([first, second], 1), full, rtol=1e-4, atol=1e-4
+    )
+
+
+def test_rwkv_block_decode_equals_train():
+    B, S, D, hd, F = 2, 16, 32, 8, 64
+    p = rwkv6.rwkv_init(jax.random.PRNGKey(2), D, F, hd)
+    p = jax.tree.map(
+        lambda x: x + 0.05 * jax.random.normal(jax.random.PRNGKey(3),
+                                               x.shape), p
+    )
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, S, D))
+    full, _ = rwkv6.block_apply(p, x, hd, dtype=jnp.float32)
+    cache = None
+    outs = []
+    for t in range(S):
+        o, cache = rwkv6.block_apply(p, x[:, t:t + 1], hd, cache=cache,
+                                     dtype=jnp.float32)
+        outs.append(o)
+    np.testing.assert_allclose(
+        jnp.concatenate(outs, 1), full, rtol=2e-4, atol=2e-4
+    )
+
+
+def test_rglru_decode_equals_train():
+    B, S, D, R = 2, 24, 32, 16
+    p = rglru.rglru_init(jax.random.PRNGKey(5), D, R)
+    x = jax.random.normal(jax.random.PRNGKey(6), (B, S, D))
+    full, _ = rglru.rglru_apply(p, x, dtype=jnp.float32)
+    cache = None
+    outs = []
+    for t in range(S):
+        o, cache = rglru.rglru_apply(p, x[:, t:t + 1], cache=cache,
+                                     dtype=jnp.float32)
+        outs.append(o)
+    np.testing.assert_allclose(
+        jnp.concatenate(outs, 1), full, rtol=2e-4, atol=2e-4
+    )
+
+
+def test_rglru_state_bounded():
+    """|a_t| < 1 by construction: state cannot blow up over long rollouts."""
+    B, S, D, R = 1, 512, 16, 8
+    p = rglru.rglru_init(jax.random.PRNGKey(7), D, R)
+    x = jax.random.normal(jax.random.PRNGKey(8), (B, S, D)) * 5.0
+    y, cache = rglru.rglru_apply(p, x, dtype=jnp.float32)
+    assert bool(jnp.isfinite(y).all())
+    assert float(jnp.abs(cache["h"]).max()) < 1e3
+
+
+def test_decay_clamp_keeps_chunks_finite():
+    """Worst-case decay within the clamp cannot overflow f32 in a chunk."""
+    B, S, H, hd = 1, rwkv6.CHUNK, 1, 4
+    r = jnp.ones((B, S, H, hd))
+    k = jnp.ones((B, S, H, hd))
+    v = jnp.ones((B, S, H, hd))
+    lw = jnp.full((B, S, H, hd), -4.0)  # fastest decay under WW_CLAMP
+    u = jnp.zeros((H, hd))
+    out, st = rwkv6.wkv_chunked(r, k, v, lw, u, jnp.zeros((B, H, hd, hd)))
+    assert bool(jnp.isfinite(out).all()) and bool(jnp.isfinite(st).all())

@@ -1,0 +1,86 @@
+"""core.sparsity — co-design balanced pruning + select-index format."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsity as S
+
+
+def test_mask_is_balanced():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 24))
+    cfg = S.SparsityConfig(16, 8)
+    mask = S.balanced_prune_mask(w, cfg)
+    assert S.verify_balance(mask, cfg)
+    assert float(mask.mean()) == pytest.approx(0.5)
+
+
+def test_mask_keeps_topk_magnitude():
+    cfg = S.SparsityConfig(4, 2)
+    w = jnp.array([[0.1], [3.0], [-2.0], [0.5]])
+    mask = S.balanced_prune_mask(w, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(mask[:, 0]), [False, True, True, False]
+    )
+
+
+def test_compress_decompress_roundtrip():
+    cfg = S.SparsityConfig(16, 8)
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 12))
+    wp = S.apply_prune(w, cfg)
+    values, select = S.compress(wp, cfg)
+    assert values.shape == (32, 12) and select.dtype == jnp.uint8
+    back = S.decompress(values, select, cfg, 64)
+    np.testing.assert_allclose(back, wp, rtol=1e-6, atol=1e-6)
+
+
+def test_select_indices_ascending_in_group():
+    cfg = S.SparsityConfig(16, 8)
+    w = jax.random.normal(jax.random.PRNGKey(2), (32, 6))
+    _, select = S.compress(S.apply_prune(w, cfg), cfg)
+    sel = np.asarray(select).reshape(2, 8, 6)
+    assert (np.diff(sel, axis=1) > 0).all()  # strict ascend inside group
+
+
+def test_sparse_matmul_ref_equals_dense():
+    cfg = S.SparsityConfig(16, 8)
+    w = jax.random.normal(jax.random.PRNGKey(3), (48, 10))
+    wp = S.apply_prune(w, cfg)
+    values, select = S.compress(wp, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (5, 48))
+    y = S.sparse_matmul_ref(x, values, select, cfg)
+    np.testing.assert_allclose(y, x @ wp, rtol=1e-5, atol=1e-5)
+
+
+def test_prune_ste_gradient():
+    w = jax.random.normal(jax.random.PRNGKey(5), (32, 4))
+    g = jax.grad(lambda w: jnp.sum(S.prune_ste(w, 16, 8)))(w)
+    np.testing.assert_allclose(g, jnp.ones_like(w))
+
+
+def test_sparsity_schedule_monotone():
+    ks = [int(S.sparsity_schedule(s, start=10, end=110, final_keep=8,
+                                  group_size=16)) for s in range(0, 130, 10)]
+    assert ks[0] == 16 and ks[-1] == 8
+    assert all(a >= b for a, b in zip(ks, ks[1:]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    groups=st.integers(1, 6),
+    keep=st.integers(1, 16),
+    n=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_balance_property(groups, keep, n, seed):
+    g = 16
+    keep = min(keep, g)
+    cfg = S.SparsityConfig(g, keep)
+    w = jax.random.normal(jax.random.PRNGKey(seed), (groups * g, n))
+    mask = S.balanced_prune_mask(w, cfg)
+    assert S.verify_balance(mask, cfg)
+    values, select = S.compress(S.apply_prune(w, cfg), cfg)
+    back = S.decompress(values, select, cfg, groups * g)
+    np.testing.assert_allclose(back, S.apply_prune(w, cfg), atol=1e-6)

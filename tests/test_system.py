@@ -1,0 +1,101 @@
+"""End-to-end system test: the paper's full pipeline.
+
+synthetic IEGM -> co-design QAT training (50% balanced sparsity + 8-bit)
+-> compiler freeze -> chip-format execution (reference AND Pallas kernel
+paths) -> 6-segment voting diagnosis -> chip perf model at the paper's
+operating point.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import va_cnn
+from repro.core import compiler, sparsity, vadetect
+from repro.data import iegm
+from repro.serve.va_service import VAService
+from repro.train import trainer
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = va_cnn.CONFIG
+    params = vadetect.init(jax.random.PRNGKey(0), cfg)
+    opt = optim.adam(3e-3)
+    state = trainer.init_state(params, opt)
+    step = jax.jit(trainer.make_train_step(
+        lambda p, b: vadetect.loss_fn(p, b, cfg), opt, clip_norm=1.0
+    ), donate_argnums=(0,))
+    stream = iegm.IEGMStream(batch=64, seed=0)
+    for i in range(150):
+        state, m = step(state, stream.batch_at(i))
+    return state["params"], cfg
+
+
+def test_end_to_end_diagnosis(trained):
+    params, cfg = trained
+    program = compiler.compile_model(params, cfg)
+    svc = VAService(program, cfg)
+    batch = iegm.synth_diagnosis_batch(jax.random.PRNGKey(99), 32)
+    out = svc.diagnose_batch(batch["signal"])
+    correct = sum(
+        int(d.is_va) == int(batch["label"][i]) for i, d in enumerate(out)
+    )
+    # post-vote diagnostic accuracy on synthetic data must be near-perfect
+    assert correct / len(out) >= 0.95, f"{correct}/{len(out)}"
+
+
+def test_compiled_balance_invariant(trained):
+    """Every sparse layer of the compiled program is exactly balanced —
+    the property that makes the chip's synchronous zero-skip legal."""
+    params, cfg = trained
+    program = compiler.compile_model(params, cfg)
+    for i, m in enumerate(program.layer_meta):
+        layer = program.layers[m["name"]]
+        if not layer.sparse:
+            continue
+        scfg = sparsity.SparsityConfig(layer.group_size, layer.keep)
+        dense = sparsity.decompress(
+            layer.values_q.astype(jnp.float32), layer.select, scfg,
+            layer.k_dense,
+        )
+        mask = dense != 0
+        counts = mask.reshape(-1, scfg.group_size, mask.shape[-1]).sum(1)
+        assert int(counts.max()) <= scfg.keep
+
+
+def test_kernel_path_agrees_after_training(trained):
+    params, cfg = trained
+    program = compiler.compile_model(params, cfg)
+    x = iegm.synth_batch(jax.random.PRNGKey(5), 8)["signal"]
+    y_ref = compiler.execute(program, x, cfg, path="reference")
+    y_kernel = compiler.execute(program, x, cfg, path="kernel")
+    np.testing.assert_allclose(y_kernel, y_ref, rtol=2e-3, atol=2e-3)
+
+
+def test_chip_report_matches_paper_point(trained):
+    params, cfg = trained
+    program = compiler.compile_model(params, cfg)
+    s = program.report.summary()
+    assert s["latency_us"] == pytest.approx(35.0, rel=0.3)
+    assert s["effective_GOPS"] == pytest.approx(150.0, rel=0.3)
+    assert s["avg_power_uW"] == pytest.approx(10.60, rel=0.3)
+
+
+def test_mixed_precision_point_trains(trained):
+    """The CMUL's mixed 8/4-bit demo point still reaches high accuracy."""
+    cfg = va_cnn.MIXED
+    params = vadetect.init(jax.random.PRNGKey(1), cfg)
+    opt = optim.adam(3e-3)
+    state = trainer.init_state(params, opt)
+    step = jax.jit(trainer.make_train_step(
+        lambda p, b: vadetect.loss_fn(p, b, cfg), opt, clip_norm=1.0
+    ), donate_argnums=(0,))
+    stream = iegm.IEGMStream(batch=64, seed=1)
+    accs = []
+    for i in range(150):
+        state, m = step(state, stream.batch_at(i))
+        accs.append(float(m["accuracy"]))
+    assert np.mean(accs[-10:]) > 0.93

@@ -1,0 +1,90 @@
+"""The paper's VA detector: shapes, voting, QAT training, chip compile."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compiler, vadetect
+from repro.data import iegm
+
+
+def test_forward_shapes():
+    params = vadetect.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 512))
+    logits = vadetect.apply(params, x)
+    assert logits.shape == (4, 2)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_param_count_small():
+    params = vadetect.init(jax.random.PRNGKey(0))
+    n = vadetect.param_count(params)
+    assert 10_000 < n < 100_000  # implantable-class model size
+
+
+def test_vote_majority_and_tiebreak():
+    assert int(vadetect.vote(jnp.array([1, 1, 1, 0, 0, 0]))) == 1  # tie->VA
+    assert int(vadetect.vote(jnp.array([0, 0, 0, 0, 1, 1]))) == 0
+    assert int(vadetect.vote(jnp.array([1, 1, 1, 1, 0, 1]))) == 1
+
+
+def test_qat_training_learns():
+    """A few hundred QAT steps must reach high accuracy on synthetic IEGM
+    (sparse 16:8 + 8-bit constraints active the whole time)."""
+    from repro import optim
+    from repro.train import trainer
+
+    cfg = vadetect.VAConfig()
+    params = vadetect.init(jax.random.PRNGKey(0), cfg)
+    opt = optim.adam(3e-3)
+    state = trainer.init_state(params, opt)
+    step = jax.jit(trainer.make_train_step(
+        lambda p, b: vadetect.loss_fn(p, b, cfg), opt, clip_norm=1.0
+    ), donate_argnums=(0,))
+    stream = iegm.IEGMStream(batch=64, seed=0)
+    accs = []
+    for i in range(120):
+        state, m = step(state, stream.batch_at(i))
+        accs.append(float(m["accuracy"]))
+    assert np.mean(accs[-10:]) > 0.95, np.mean(accs[-10:])
+
+
+def test_compile_and_execute_matches_eval():
+    cfg = vadetect.VAConfig()
+    params = vadetect.init(jax.random.PRNGKey(2), cfg)
+    program = compiler.compile_model(params, cfg)
+    x = iegm.synth_batch(jax.random.PRNGKey(3), 8)["signal"]
+    y_train_path = vadetect.apply(params, x, cfg, train=False)
+    y_chip = compiler.execute(program, x, cfg, path="reference")
+    np.testing.assert_allclose(y_chip, y_train_path, rtol=2e-2, atol=2e-2)
+    # predictions identical
+    np.testing.assert_array_equal(
+        np.argmax(np.asarray(y_chip), -1),
+        np.argmax(np.asarray(y_train_path), -1),
+    )
+
+
+def test_compile_execute_kernel_path():
+    cfg = vadetect.VAConfig()
+    params = vadetect.init(jax.random.PRNGKey(4), cfg)
+    program = compiler.compile_model(params, cfg)
+    x = iegm.synth_batch(jax.random.PRNGKey(5), 4)["signal"]
+    y_ref = compiler.execute(program, x, cfg, path="reference")
+    y_k = compiler.execute(program, x, cfg, path="kernel")
+    np.testing.assert_allclose(y_k, y_ref, rtol=1e-3, atol=1e-3)
+
+
+def test_compression_ratio():
+    cfg = vadetect.VAConfig()
+    params = vadetect.init(jax.random.PRNGKey(6), cfg)
+    program = compiler.compile_model(params, cfg)
+    # 50% sparsity + 8-bit + 4-bit selects vs dense f32: > 4x
+    assert program.compression_ratio() > 4.0
+
+
+def test_diagnose_shapes():
+    params = vadetect.init(jax.random.PRNGKey(7))
+    recs = iegm.synth_diagnosis_batch(jax.random.PRNGKey(8), 3)
+    out = vadetect.diagnose(params, recs["signal"])
+    assert out.shape == (3,)
