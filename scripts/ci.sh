@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 CI: run the full suite on a forced 8-device host platform so
+# the sharding rules, shard_map collectives, and the multi-device tests
+# in tests/test_dist_multidevice.py are exercised on a >1-device mesh
+# (single-device hosts would silently skip them).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# our flag goes LAST: XLA takes the last duplicate, so a pre-set
+# device-count in the caller's environment cannot silently shrink the
+# mesh and skip the multidevice tests
+export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"

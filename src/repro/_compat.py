@@ -1,0 +1,64 @@
+"""Forward-compat shims for older jax versions.
+
+The repo targets the current jax mesh API (`jax.make_mesh(...,
+axis_types=(jax.sharding.AxisType.Auto, ...))`). Older jax (< 0.5)
+predates `AxisType` and the `axis_types` kwarg but builds the identical
+(fully-Auto) mesh without them, so the shim is behavior-preserving:
+
+  * `jax.sharding.AxisType` — provided as an enum with Auto/Explicit/
+    Manual members when missing;
+  * `jax.make_mesh` — wrapped to accept and drop `axis_types` when the
+    installed signature lacks it (only Auto axes existed pre-0.5, which
+    is the only value this repo passes).
+
+On a current jax both checks are no-ops. `install()` is idempotent and
+runs from `repro/__init__.py`, so any entry point that imports the
+package gets the shim before touching mesh construction.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if not hasattr(jax, "make_mesh"):
+        return  # pre-0.4.35 jax: nothing to wrap; mesh.py will fail
+        #         loudly at call time, which beats crashing on import
+    if getattr(jax.make_mesh, "_repro_compat", False):
+        return
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):
+        return
+    if "axis_types" not in params:
+        orig = jax.make_mesh
+
+        @functools.wraps(orig)
+        def make_mesh(*args, axis_types=None, **kwargs):
+            del axis_types  # pre-0.5 jax: all axes are Auto
+            return orig(*args, **kwargs)
+
+        make_mesh._repro_compat = True
+        jax.make_mesh = make_mesh
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """`Compiled.cost_analysis()` returns a dict on current jax but a
+    one-element list of dicts on older versions; normalize to a dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca

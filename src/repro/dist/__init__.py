@@ -1,0 +1,38 @@
+"""Distributed execution: sharding rules, gradient accumulation,
+compressed cross-pod collectives.
+
+  sharding    — mesh-aware PartitionSpec rules for params / batches /
+                caches, plus the logical activation-constraint system
+                (`activation_context` / `constrain`);
+  accumulate  — micro-batch gradient accumulation (scan);
+  compression — int8 + error-feedback gradient reduction for the
+                DCN-bound `pod` axis.
+"""
+
+from repro.dist import accumulate, compression, sharding
+from repro.dist.accumulate import accumulate_grads
+from repro.dist.sharding import (
+    activation_context,
+    batch_specs,
+    cache_specs,
+    constrain,
+    data_axes,
+    named,
+    param_specs,
+    spec_for_path,
+)
+
+__all__ = [
+    "accumulate",
+    "accumulate_grads",
+    "activation_context",
+    "batch_specs",
+    "cache_specs",
+    "compression",
+    "constrain",
+    "data_axes",
+    "named",
+    "param_specs",
+    "sharding",
+    "spec_for_path",
+]

@@ -1,0 +1,54 @@
+"""Micro-batch gradient accumulation.
+
+`accumulate_grads` splits the global batch into `n_steps` leading-dim
+chunks and scans `grad_fn` over them, summing gradients in the params'
+dtype (f32 masters) and averaging at the end. Because every loss in the
+repo is a mean over batch elements, the mean of the micro-batch
+gradients equals the full-batch gradient exactly (up to reduction-order
+noise) — the invariant `tests/test_train.py` pins.
+
+The scan keeps HLO size O(1) in `n_steps`, and under jit the per-chunk
+activations are freed between iterations — peak activation memory drops
+by ~n_steps while the wall-clock FLOPs stay identical. This is the
+standard lever for fitting the train_4k cell on small meshes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def accumulate_grads(
+    grad_fn: Callable[[Any, Any], tuple[Any, dict]],
+    params: Any,
+    batch: Any,
+    n_steps: int,
+) -> tuple[Any, dict]:
+    """Run `grad_fn(params, micro_batch) -> (grads, metrics)` over
+    `n_steps` leading-dim chunks of `batch`; returns the mean gradients
+    and the mean of each metric."""
+    if n_steps is None or n_steps <= 1:
+        return grad_fn(params, batch)
+
+    def split(x):
+        b = x.shape[0]
+        if b % n_steps:
+            raise ValueError(
+                f"batch dim {b} not divisible by n_steps={n_steps}"
+            )
+        return x.reshape(n_steps, b // n_steps, *x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+
+    def body(g_acc, mb):
+        g, metrics = grad_fn(params, mb)
+        return jax.tree.map(jnp.add, g_acc, g), metrics
+
+    g0 = jax.tree.map(jnp.zeros_like, params)
+    g_sum, stacked = jax.lax.scan(body, g0, micro)
+    grads = jax.tree.map(lambda g: g / n_steps, g_sum)
+    metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), stacked)
+    return grads, metrics

@@ -1,0 +1,284 @@
+"""Mesh-aware partition rules: params, batches, caches, activations.
+
+One rule table serves every architecture because the param trees follow
+two conventions (see `models/layers.py`): 2-D weights are
+(in_features, out_features), and path names identify the role of each
+linear. The physical axes come from `launch/mesh.py`:
+
+  data  — DP + FSDP (ZeRO-style parameter/optimizer sharding);
+  model — TP (attention heads / ffn columns / vocab / MoE hidden);
+  pod   — pure DP across pods (params replicated; `dist.compression`
+          owns the cross-pod gradient traffic).
+
+The config's parallelism profile gates the rules: `use_tp=False` folds
+the model axis into data parallelism (params fully replicated,
+`data_axes` returns every mesh axis); `fsdp=False` drops the data-axis
+entries. Every axis assignment passes the `_dim_ok` divisibility guard —
+a dimension the axis does not divide is left unsharded rather than
+padded here (padding is the model's job, see `transformer.Dims`).
+
+Activation shardings use a *logical* vocabulary ("dp", "tp", None) via
+`constrain(...)`, resolved against the (cfg, mesh) pushed by
+`activation_context`. Outside a context `constrain` is an identity, so
+model code is mesh-free by default and tests run unsharded.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Axis helpers
+# ---------------------------------------------------------------------------
+
+
+def _axis_size(axis, mesh: Mesh) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return math.prod(_axis_size(a, mesh) for a in axis)
+    return mesh.shape[axis]
+
+
+def _dim_ok(dim: int, axis, mesh: Mesh) -> bool:
+    """Can `dim` be sharded over `axis` (a name, tuple of names, or
+    None) without padding?"""
+    size = _axis_size(axis, mesh)
+    return size <= 1 or dim % size == 0
+
+
+def data_axes(cfg, mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes carrying the batch dimension. TP profiles reserve the
+    'model' axis; pure-DP profiles (use_tp=False) fold it into DP."""
+    if cfg.use_tp:
+        return tuple(n for n in mesh.axis_names if n != "model")
+    return tuple(mesh.axis_names)
+
+
+def _fsdp_axis(cfg, mesh: Mesh) -> Optional[str]:
+    if cfg.fsdp and "data" in mesh.axis_names:
+        return "data"
+    return None
+
+
+def _tp_axis(cfg, mesh: Mesh) -> Optional[str]:
+    if cfg.use_tp and "model" in mesh.axis_names:
+        return "model"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+# in_features -> fsdp, out_features -> tp (column-parallel)
+_COL_PARALLEL = ("wq", "wk", "wv", "w_gate", "w_up")
+# in_features -> tp, out_features -> fsdp (row-parallel)
+_ROW_PARALLEL = ("wo", "w_down")
+# always replicated (norm scales/biases, linear biases, quant scales)
+_REPLICATED_LEAVES = ("scale", "bias", "b", "meta")
+
+_MOE_WEIGHTS = ("w_gate", "w_up", "w_down")
+
+
+def _guarded(shape: Sequence[int], last_two: tuple, mesh: Mesh) -> P:
+    """Spec for `shape`: `last_two` axes on the trailing two dims (guard
+    applied per-dim), None on every leading (stack) dim."""
+    nd = len(shape)
+    entries: list[Any] = [None] * nd
+    for off, axis in enumerate(last_two):
+        i = nd - 2 + off
+        if i < 0:
+            continue
+        if axis is not None and _dim_ok(shape[i], axis, mesh):
+            entries[i] = axis
+    return P(*entries)
+
+
+def spec_for_path(path: str, shape: Sequence[int], cfg, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf, identified by its
+    '/'-joined tree path (e.g. "blocks/pos0/mix/wq/w")."""
+    parts = [p for p in path.split("/") if p]
+    leaf = parts[-1]
+    fsdp = _fsdp_axis(cfg, mesh)
+    tp = _tp_axis(cfg, mesh)
+
+    if leaf in _REPLICATED_LEAVES or (parts and parts[-2:-1] == ["meta"]):
+        return P()
+
+    # raw-array leaves (MoE expert stacks) are named directly; linear
+    # leaves are {"w"} dicts named by their parent module
+    name = parts[-2] if leaf in ("w", "packed", "values_q", "select") \
+        else leaf
+    in_moe = "moe" in parts
+
+    if in_moe and name in _MOE_WEIGHTS:
+        if getattr(cfg, "moe_shard", "tp_fsdp") == "tp_only":
+            fsdp = None  # experts replicated over data: no D-contraction
+            #              all-reduce for small-expert models
+        if name == "w_down":
+            return _guarded(shape, (tp, fsdp), mesh)
+        return _guarded(shape, (fsdp, tp), mesh)
+
+    if name == "embed":
+        # vocab rows on tp (embedding gather all-reduces over model),
+        # d_model on fsdp
+        return _guarded(shape, (tp, fsdp), mesh)
+    if name == "lm_head":
+        return _guarded(shape, (fsdp, tp), mesh)
+    if name == "router":
+        return _guarded(shape, (fsdp, None), mesh)
+    if name in _COL_PARALLEL:
+        return _guarded(shape, (fsdp, tp), mesh)
+    if name in _ROW_PARALLEL:
+        return _guarded(shape, (tp, fsdp), mesh)
+    # unknown leaves (recurrent-block internals, pos_emb, compiled
+    # serving formats): replicate, dim-for-dim
+    return P(*([None] * len(shape)))
+
+
+def _path_str(keypath) -> str:
+    parts = []
+    for k in keypath:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _tree_paths(tree: Any):
+    """(path_str, leaf) pairs in tree order."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_path_str(kp), leaf) for kp, leaf in flat]
+
+
+def param_specs(shapes: Any, cfg, mesh: Mesh) -> Any:
+    """PartitionSpec pytree mirroring a parameter (shape) tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    specs = [
+        spec_for_path(_path_str(kp), getattr(leaf, "shape", ()), cfg, mesh)
+        for kp, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(tree: Any, cfg, mesh: Mesh) -> Any:
+    """Shard the leading (batch) dim of every leaf over the data axes;
+    everything else replicated. Leaves whose batch dim the combined
+    data-axis size does not divide stay unsharded."""
+    axes = data_axes(cfg, mesh)
+
+    def one(leaf):
+        shape = getattr(leaf, "shape", ())
+        if not shape:
+            return P()
+        first = axes if _dim_ok(shape[0], axes, mesh) else None
+        return P(first, *([None] * (len(shape) - 1)))
+
+    return jax.tree.map(one, tree)
+
+
+_KV_LEAVES = ("k", "v", "k_scale", "v_scale", "cross_k", "cross_v")
+
+
+def cache_specs(cache: Any, cfg, mesh: Mesh) -> Any:
+    """Decode-cache rules: batch dim over the data axes; KV-head dim of
+    attention buffers over the model axis. Stacked subtrees ("blocks",
+    "dec") carry a leading layer-group dim before the batch dim."""
+    axes = data_axes(cfg, mesh)
+    tp = _tp_axis(cfg, mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = []
+    for kp, leaf in flat:
+        parts = _path_str(kp).split("/")
+        shape = getattr(leaf, "shape", ())
+        b_idx = 1 if parts and parts[0] in ("blocks", "dec") else 0
+        entries: list[Any] = [None] * len(shape)
+        if len(shape) > b_idx and _dim_ok(shape[b_idx], axes, mesh):
+            entries[b_idx] = axes
+        h_idx = b_idx + 2  # (B, slots, heads, ...) layout
+        if (
+            parts[-1] in _KV_LEAVES
+            and tp is not None
+            and len(shape) > h_idx
+            and _dim_ok(shape[h_idx], tp, mesh)
+        ):
+            entries[h_idx] = tp
+        specs.append(P(*entries))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named(specs: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree (None passes
+    through, for jit in_shardings slots left to the compiler)."""
+    def one(s):
+        if s is None:
+            return None
+        return NamedSharding(mesh, s)
+
+    return jax.tree.map(
+        one, specs, is_leaf=lambda x: x is None or isinstance(x, P)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Logical activation constraints
+# ---------------------------------------------------------------------------
+
+_ACTIVATION_CTX: list[tuple[Any, Mesh]] = []
+
+
+@contextlib.contextmanager
+def activation_context(cfg, mesh: Mesh):
+    """Makes `constrain` resolve logical axes against (cfg, mesh).
+    Nestable; the innermost context wins."""
+    _ACTIVATION_CTX.append((cfg, mesh))
+    try:
+        yield
+    finally:
+        _ACTIVATION_CTX.pop()
+
+
+def constrain(x: jax.Array, *logical) -> jax.Array:
+    """with_sharding_constraint over logical axes ("dp", "tp", None),
+    one per dim of x. A no-op outside `activation_context`, and any
+    logical axis whose physical size does not divide the dim is
+    dropped — model code never has to know the mesh."""
+    if not _ACTIVATION_CTX:
+        return x
+    cfg, mesh = _ACTIVATION_CTX[-1]
+    if len(logical) != x.ndim:
+        raise ValueError(
+            f"constrain: {len(logical)} axes for rank-{x.ndim} array"
+        )
+    dp = data_axes(cfg, mesh)
+    tp = _tp_axis(cfg, mesh)
+    entries: list[Any] = []
+    for dim, ax in zip(x.shape, logical):
+        if ax == "dp":
+            entries.append(dp if _dim_ok(dim, dp, mesh) else None)
+        elif ax == "tp":
+            entries.append(
+                tp if tp is not None and _dim_ok(dim, tp, mesh) else None
+            )
+        elif ax is None:
+            entries.append(None)
+        else:
+            raise ValueError(f"unknown logical axis {ax!r}")
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries))
+    )

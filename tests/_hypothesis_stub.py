@@ -1,0 +1,88 @@
+"""Deterministic stand-in for `hypothesis` (not installed in the CI
+container). Registered as `sys.modules["hypothesis"]` by conftest.py
+only when the real package is missing.
+
+Covers the subset the suite uses — `@settings(max_examples=...,
+deadline=...)` over `@given(**strategies)` with `st.integers` /
+`st.sampled_from` — by running the test body over a seeded pseudo-random
+sample of the strategy space. No shrinking, no database; failures
+reproduce exactly because the draw sequence is fixed.
+"""
+
+from __future__ import annotations
+
+import random
+
+_DEFAULT_EXAMPLES = 20
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class strategies:  # noqa: N801 — mirrors `hypothesis.strategies`
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+    del deadline
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        # NOTE: zero-arg wrapper, and no functools.wraps — copying
+        # __wrapped__ would make pytest read fn's signature and demand
+        # fixtures named after the strategy kwargs.
+        def wrapper():
+            rng = random.Random(_SEED)
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_EXAMPLES)
+            ran = 0
+            for _ in range(n * 4):
+                if ran >= n:
+                    break
+                drawn = {k: s.draw(rng) for k, s in strats.items()}
+                try:
+                    fn(**drawn)
+                except _Assumption:
+                    continue  # assume() rejected the example: resample
+                ran += 1
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+class _Assumption(Exception):
+    pass
+
+
+def assume(condition):
+    if not condition:
+        raise _Assumption("assumption not satisfied")
+    return True

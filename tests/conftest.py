@@ -6,6 +6,14 @@ import sys
 # and benchmarks must see the host's real single device.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # container has no hypothesis: deterministic stub
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
