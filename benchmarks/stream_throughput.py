@@ -1,0 +1,246 @@
+"""Fleet streaming throughput: patients sustained at 250 Hz vs batch
+bucket size vs device count.
+
+Two throughput views per (bucket, devices) cell, mirroring how
+BENCH_dist.json pairs HLO-accounted bytes with modeled ring egress:
+
+  * wall — what this host actually sustains through the full loop
+    (schedule → pack → sharded jitted inference → vectorized vote).
+    Host CPUs have few cores, so forced host "devices" share them and
+    wall numbers need not scale with device count;
+  * modeled chip fleet — each mesh device is one accelerator chip twin
+    running its shard of every bucket serially at the perf model's
+    per-segment latency (35 µs at the paper's operating point). This is
+    the deployment quantity — N chips monitor N disjoint fleet slices —
+    and it scales exactly linearly: 8 devices = 8x one device.
+
+`--smoke` runs the acceptance configuration: a 1000-patient fleet that
+must sustain real-time rate (one 512-sample segment per patient per
+2.048 s => ~488 seg/s aggregate) with zero scheduler drops, plus a
+reduced sweep, and asserts both criteria. CI runs it on 8 forced host
+devices (scripts/ci.sh).
+
+    PYTHONPATH=src python benchmarks/stream_throughput.py [--smoke]
+"""
+
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""
+):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + os.environ.get("XLA_FLAGS", "")
+    ).strip()
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compiler, vadetect
+from repro.launch.stream import make_data_mesh
+from repro.stream import (
+    SEGMENT_PERIOD_S,
+    FleetConfig,
+    FleetRunner,
+    simulate,
+)
+
+
+def _verify_batch_sharding(runner, bucket: int, devices: int) -> bool:
+    """The modeled chip-fleet rate is N/latency *by definition*; what
+    must be verified is the mechanism behind it — that the runner really
+    splits a bucket bucket/N per device over the data axis (otherwise
+    'N chip twins over disjoint fleet slices' is fiction)."""
+    if devices <= 1:
+        return True
+    x = jax.device_put(
+        jnp.zeros((bucket, vadetect.RECORD_LEN)), runner._in_sharding
+    )
+    shard_rows = {s.data.shape[0] for s in x.addressable_shards}
+    return (
+        len(x.sharding.device_set) == devices
+        and shard_rows == {bucket // devices}
+    )
+
+
+def run_cell(
+    program,
+    *,
+    patients: int,
+    segments: int,
+    bucket: int,
+    devices: int,
+    seed: int = 0,
+) -> dict:
+    """One (bucket, devices) cell: fleet sim with a single-bucket ladder
+    (plus a small partial-batch bucket so drains stay fixed-shape)."""
+    mesh = make_data_mesh(devices)
+    runner = FleetRunner(program, path="twin", mesh=mesh)
+    shard_ok = _verify_batch_sharding(runner, bucket, devices)
+    small = max(8, bucket // 16)
+    buckets = (small, bucket) if small < bucket else (bucket,)
+    cfg = FleetConfig(
+        n_patients=patients,
+        segments_per_patient=segments,
+        seed=seed,
+        va_fraction=0.05,
+        jitter_frac=0.02,
+        buckets=buckets,
+        path="twin",
+    )
+    out = simulate(cfg, runner=runner)
+    m = out["metrics"]
+    return {
+        "bucket": bucket,
+        "devices": devices,
+        "batch_sharded_over_devices": shard_ok,
+        "patients": patients,
+        "segments_total": m["segments_total"],
+        "dropped_total": m["dropped_total"],
+        "pad_fraction": m["pad_fraction"],
+        "jit_cache_misses": out["jit_cache_misses"],
+        "wall_segments_per_s": m["segments_per_s_wall"],
+        "modeled_chip_segments_per_s": out["chip"][
+            "modeled_fleet_segments_per_s"
+        ],
+        "deadline_slack_s": m.get("deadline_slack_s"),
+        "patients_sustained_at_250hz_wall": int(
+            m["segments_per_s_wall"] * SEGMENT_PERIOD_S
+        ),
+        "patients_sustained_at_250hz_modeled_chips": int(
+            out["chip"]["modeled_fleet_segments_per_s"]
+            * SEGMENT_PERIOD_S
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep + 1000-patient real-time check")
+    ap.add_argument("--patients", type=int, default=512)
+    ap.add_argument("--segments", type=int, default=6)
+    ap.add_argument("--out", default="BENCH_stream.json")
+    args = ap.parse_args()
+
+    params = vadetect.init(jax.random.PRNGKey(0))
+    program = compiler.compile_model(params)
+
+    if args.smoke:
+        buckets = [32, 128]
+        device_counts = [1, 8]
+        sweep_patients, sweep_segments = 64, 4
+    else:
+        buckets = [32, 128, 256]
+        device_counts = [1, 2, 4, 8]
+        sweep_patients, sweep_segments = args.patients, args.segments
+    device_counts = [d for d in device_counts if d <= jax.device_count()]
+
+    cells = []
+    for b in buckets:
+        for d in device_counts:
+            cell = run_cell(
+                program,
+                patients=sweep_patients,
+                segments=sweep_segments,
+                bucket=b,
+                devices=d,
+            )
+            cells.append(cell)
+            print(
+                f"[stream_throughput] bucket={b:4d} devices={d} "
+                f"wall={cell['wall_segments_per_s']:7.0f} seg/s "
+                f"modeled-chips={cell['modeled_chip_segments_per_s']:7.0f} "
+                f"seg/s dropped={cell['dropped_total']}",
+                flush=True,
+            )
+
+    # device-count scaling on the largest bucket (modeled chip fleet:
+    # the deployment quantity; forced host devices share the CPU, so
+    # wall numbers are reported but not the scaling claim)
+    largest = max(buckets)
+    by_dev = {
+        c["devices"]: c for c in cells if c["bucket"] == largest
+    }
+    lo, hi = min(by_dev), max(by_dev)
+    scaling = {
+        "bucket": largest,
+        "devices_lo": lo,
+        "devices_hi": hi,
+        "modeled_chip_segments_per_s_lo": by_dev[lo][
+            "modeled_chip_segments_per_s"
+        ],
+        "modeled_chip_segments_per_s_hi": by_dev[hi][
+            "modeled_chip_segments_per_s"
+        ],
+        "modeled_speedup": by_dev[hi]["modeled_chip_segments_per_s"]
+        / by_dev[lo]["modeled_chip_segments_per_s"],
+        "wall_segments_per_s_lo": by_dev[lo]["wall_segments_per_s"],
+        "wall_segments_per_s_hi": by_dev[hi]["wall_segments_per_s"],
+    }
+
+    # the 1000-patient real-time acceptance cell
+    rt_devices = max(device_counts)
+    rt_mesh = make_data_mesh(rt_devices)
+    rt_runner = FleetRunner(program, path="twin", mesh=rt_mesh)
+    rt_cfg = FleetConfig(
+        n_patients=1000,
+        segments_per_patient=6,  # one full vote window per patient
+        va_fraction=0.05,
+        jitter_frac=0.02,
+        buckets=(32, 128, 512),
+        path="twin",
+    )
+    rt = simulate(rt_cfg, runner=rt_runner)
+    realtime = {
+        "patients": 1000,
+        "devices": rt_devices,
+        "segments_total": rt["metrics"]["segments_total"],
+        "dropped_total": rt["metrics"]["dropped_total"],
+        "required_segments_per_s": rt["realtime"][
+            "required_segments_per_s"
+        ],
+        "sustained_segments_per_s": rt["realtime"][
+            "sustained_segments_per_s"
+        ],
+        "realtime_factor": rt["realtime"]["realtime_factor"],
+        "deadline_slack_s": rt["metrics"].get("deadline_slack_s"),
+        "jit_cache_misses": rt["jit_cache_misses"],
+    }
+    print(
+        f"[stream_throughput] 1000 patients on {rt_devices} devices: "
+        f"{realtime['sustained_segments_per_s']:.0f} seg/s sustained vs "
+        f"{realtime['required_segments_per_s']:.0f} required "
+        f"({realtime['realtime_factor']:.1f}x real-time), "
+        f"dropped={realtime['dropped_total']}"
+    )
+
+    rec = {
+        "n_host_devices": jax.device_count(),
+        "chip_latency_us": program.report.latency_s * 1e6,
+        "cells": cells,
+        "scaling_largest_bucket": scaling,
+        "realtime_1000_patients": realtime,
+    }
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[stream_throughput] -> {args.out}")
+
+    # acceptance: zero scheduler drops everywhere; real-time sustained
+    # for 1000 patients; and the scaling claim's *mechanism* — the
+    # modeled chip-fleet rate is N/latency by construction, so what can
+    # regress (and is asserted) is that every multi-device cell really
+    # sharded its buckets bucket/N per device over the data axis
+    assert all(c["dropped_total"] == 0 for c in cells)
+    assert realtime["dropped_total"] == 0
+    assert all(c["batch_sharded_over_devices"] for c in cells), cells
+    if hi >= 8 * lo:
+        assert scaling["modeled_speedup"] > 4.0, scaling
+    assert realtime["realtime_factor"] >= 1.0, realtime
+
+
+if __name__ == "__main__":
+    main()

@@ -13,3 +13,9 @@ export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_coun
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q "$@"
+
+# Streaming-fleet benchmark smoke (tiny sweep + the 1000-patient
+# real-time cell on the same 8 forced host devices) so
+# benchmarks/stream_throughput.py can never bit-rot; it asserts zero
+# scheduler drops and >= real-time sustained throughput.
+python benchmarks/stream_throughput.py --smoke --out /tmp/BENCH_stream_ci.json

@@ -186,6 +186,112 @@ def synth_diagnosis_batch(
     }
 
 
+# ---------------------------------------------------------------------------
+# Per-patient deterministic segment streams (the fleet-monitoring feed)
+# ---------------------------------------------------------------------------
+
+# Distinguishes the per-patient *condition* draw from per-segment draws:
+# segment keys are fold_in(patient_key, seq), so the label fold constant
+# must sit outside any reachable seq (seqs are segment counters).
+_LABEL_FOLD = 0x7FFFFFFF
+
+
+def _segment_one(key: jax.Array, label: jax.Array) -> jax.Array:
+    """One raw (unfiltered) 512-sample segment for a given class label."""
+    k_nsr, k_vt, k_vf, k_mix, k_noise = jax.random.split(key, 5)
+    nsr = _nsr(k_nsr, 1)[0]
+    vt = _vt(k_vt, 1)[0]
+    vf = _vf(k_vf, 1)[0]
+    is_vf = jax.random.bernoulli(k_mix, 0.5)
+    va = jnp.where(is_vf, vf, vt)
+    return jnp.where(label == 1, va, nsr) + _noise(k_noise, 1)[0]
+
+
+def _patient_keys(seed: int, patient_ids: jax.Array) -> jax.Array:
+    root = jax.random.PRNGKey(seed)
+    pids = jnp.asarray(patient_ids, jnp.uint32)
+    return jax.vmap(lambda p: jax.random.fold_in(root, p))(pids)
+
+
+def _labels_from_keys(pkeys: jax.Array, va_fraction: float) -> jax.Array:
+    return jax.vmap(
+        lambda k: jax.random.bernoulli(
+            jax.random.fold_in(k, _LABEL_FOLD), va_fraction
+        )
+    )(pkeys).astype(jnp.int32)
+
+
+def patient_labels(
+    seed: int, patient_ids: jax.Array, va_fraction: float = 0.5
+) -> jax.Array:
+    """Persistent per-patient condition (0 non-VA / 1 VA), drawn once per
+    patient from fold_in(PRNGKey(seed), patient_id) so every view of the
+    fleet (sources, tests, benchmarks) agrees on the ground truth."""
+    return _labels_from_keys(
+        _patient_keys(seed, patient_ids), va_fraction
+    )
+
+
+def segment_batch(
+    seed: int,
+    patient_ids: jax.Array,
+    seqs: jax.Array,
+    *,
+    va_fraction: float = 0.5,
+) -> dict[str, jax.Array]:
+    """Batched deterministic segments for (patient, seq) pairs.
+
+    Every row is keyed fold_in(fold_in(PRNGKey(seed), patient), seq) —
+    the same (seed, patient, seq) triple regenerates bit-identical
+    telemetry regardless of batch composition, which is what makes the
+    fleet scheduler tests reproducible. Returns {signal (B, 512) f32,
+    label (B,) i32} with the label persistent per patient.
+    """
+    sqs = jnp.asarray(seqs, jnp.uint32)
+    pkeys = _patient_keys(seed, patient_ids)
+    labels = _labels_from_keys(pkeys, va_fraction)
+    skeys = jax.vmap(jax.random.fold_in)(pkeys, sqs)
+    sig = jax.vmap(_segment_one)(skeys, labels)
+    sig = bandpass(sig)
+    sig = sig / (jnp.std(sig, axis=1, keepdims=True) + 1e-6)
+    return {"signal": sig.astype(jnp.float32), "label": labels}
+
+
+# one compiled program shared by every stream_segments iterator (a
+# fleet demo opens one iterator per implant; per-iterator jit closures
+# would each pay their own identical compile). seed folds in as data.
+@jax.jit
+def _stream_one(seed, p, s, va_fraction):
+    return segment_batch(seed, p[None], s[None], va_fraction=va_fraction)
+
+
+def stream_segments(
+    patient_id: int,
+    *,
+    seed: int = 0,
+    start: int = 0,
+    va_fraction: float = 0.5,
+) -> Iterator[dict]:
+    """Infinite per-patient segment iterator (the device's view of one
+    implant's telemetry). Deterministic: two iterators for the same
+    (seed, patient_id) yield identical segments; restarting at `start=k`
+    regenerates segment k exactly."""
+    seq = start
+    while True:
+        out = _stream_one(
+            jnp.uint32(seed),
+            jnp.uint32(patient_id),
+            jnp.uint32(seq),
+            jnp.float32(va_fraction),
+        )
+        yield {
+            "signal": out["signal"][0],
+            "label": int(out["label"][0]),
+            "seq": seq,
+        }
+        seq += 1
+
+
 @dataclasses.dataclass
 class IEGMStream:
     """Deterministic, host-shardable stream of training batches.

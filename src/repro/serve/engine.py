@@ -73,43 +73,83 @@ class Engine:
         self.pos = jnp.zeros((batch_size,), jnp.int32)
         self.tokens = jnp.zeros((batch_size,), jnp.int32)
         self.active = jnp.zeros((batch_size,), bool)
+        # last (token, pos) actually written into each slot's cache.
+        # `tokens`/`pos` hold the *pending* decode input (the generated
+        # token not yet in the cache); prefill's pool-wide decode steps
+        # must re-feed other slots their committed state, not the
+        # pending one, or they would corrupt seated slots' caches.
+        self._ctok = jnp.zeros((batch_size,), jnp.int32)
+        self._cpos = jnp.zeros((batch_size,), jnp.int32)
 
     def submit(self, req: Request) -> None:
+        if req.prompt.shape[0] == 0:
+            # reject here: an empty prompt has no prefill logits to
+            # derive the first token from (admission would crash deep
+            # in _admit with an opaque TypeError)
+            raise ValueError(f"request {req.uid}: empty prompt")
         self._queue.append(req)
 
     def _admit(self) -> None:
         for slot in range(self.batch):
-            if self._slots[slot] is None and self._queue:
+            # a request finishing at admission frees the slot for the
+            # next queued request on the same tick — keep admitting
+            while self._slots[slot] is None and self._queue:
                 req = self._queue.pop(0)
-                self._slots[slot] = req
                 # per-request prefill: replay the prompt through the
                 # pool cache via decode steps (slot-local; simple and
                 # correct — a production engine would batch prefills)
                 tok = req.prompt
+                logits = None
                 for t in range(tok.shape[0]):
-                    self._step_single(slot, int(tok[t]), t)
+                    logits = self._step_single(slot, int(tok[t]), t)
+                # the first generated token comes from the prefill's
+                # final logits — not from re-feeding the last prompt
+                # token (which would write it into the cache twice)
+                first = int(jnp.argmax(logits[slot]))
+                req.output.append(first)
+                if (
+                    req.eos is not None and first == req.eos
+                ) or len(req.output) >= req.max_new:
+                    # EOS-on-first-token guard: the request finishes at
+                    # admission and must never occupy the slot — seating
+                    # it would leak the slot for requests finishing on
+                    # the same tick they were admitted.
+                    req.done = True
+                    self.active = self.active.at[slot].set(False)
+                    continue
+                self._slots[slot] = req
                 self.pos = self.pos.at[slot].set(tok.shape[0] - 1)
-                self.tokens = self.tokens.at[slot].set(int(tok[-1]))
+                self.tokens = self.tokens.at[slot].set(first)
                 self.active = self.active.at[slot].set(True)
+                break
 
-    def _step_single(self, slot: int, token: int, pos: int) -> None:
-        toks = self.tokens.at[slot].set(token)
-        poss = self.pos.at[slot].set(pos)
+    def _step_single(self, slot: int, token: int, pos: int) -> jax.Array:
+        # other slots replay their committed (token, pos) — an
+        # idempotent cache rewrite — while `slot` advances
+        self._ctok = self._ctok.at[slot].set(token)
+        self._cpos = self._cpos.at[slot].set(pos)
         logits, self.cache = self._decode(
-            self.params, self.cache, toks, poss
+            self.params, self.cache, self._ctok, self._cpos
         )
+        return logits
 
     def tick(self) -> int:
         """One decode tick for the whole pool; returns #active slots."""
         self._admit()
         if not any(r is not None for r in self._slots):
             return 0
-        pos = self.pos + 1
+        # active slots advance with their pending token; inactive slots
+        # idempotently replay their committed state (no junk writes)
+        pos = jnp.where(self.active, self.pos + 1, self._cpos)
+        toks = jnp.where(self.active, self.tokens, self._ctok)
         logits, self.cache = self._decode(
-            self.params, self.cache, self.tokens, pos
+            self.params, self.cache, toks, pos
         )
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.pos = pos
+        # this decode committed (toks, pos) into every slot's cache
+        self._ctok = toks
+        self._cpos = pos
+        self.pos = jnp.where(self.active, pos, self.pos)
         self.tokens = jnp.where(self.active, nxt, self.tokens)
         n_active = 0
         for slot, req in enumerate(self._slots):

@@ -1,22 +1,25 @@
 """The paper's deployment: VA diagnosis service (6-segment voting).
 
-Mirrors the demo pipeline: IEGM recordings stream in, each 512-sample
-segment is classified by the compiled accelerator program (software twin
-of the chip), and every 6 segments are aggregated by majority vote into a
-diagnosis. Latency accounting uses the chip perf model, so the service
-reports the same numbers the silicon measurement section does.
+Since the `repro.stream` subsystem landed, this module is the thin
+single-patient/small-clinic facade over it: segment classification goes
+through `stream.runner.FleetRunner` (the same fixed-shape bucketed
+classifier the fleet scheduler feeds), and 6-segment aggregation through
+`core.vadetect.vote`. Latency accounting uses the chip perf model, so
+the service reports the same numbers the silicon measurement section
+does. For many patients with continuous telemetry, use `repro.stream`
+directly (`stream.simulate` / `launch/stream.py`).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import compiler, vadetect
 from repro.core.perf_model import ChipReport
+from repro.stream.runner import FleetRunner
 
 
 @dataclasses.dataclass
@@ -25,6 +28,15 @@ class Diagnosis:
     is_va: bool
     segment_preds: list[int]
     chip_latency_us: float
+
+
+def _bucket_for(n: int) -> int:
+    """Smallest power-of-two batch shape >= n: the facade's bucket
+    ladder, so repeat calls with the same patient count never retrace."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
 
 
 class VAService:
@@ -40,11 +52,7 @@ class VAService:
         self.program = program
         self.cfg = cfg
         self.path = path
-        self._infer = jax.jit(
-            lambda x: jnp.argmax(
-                compiler.execute(program, x, cfg, path=path), axis=-1
-            )
-        )
+        self._runner = FleetRunner(program, cfg, path=path)
 
     @property
     def report(self) -> ChipReport:
@@ -54,7 +62,11 @@ class VAService:
         """recordings (P, 6, 512) -> one Diagnosis per patient."""
         p, s, t = recordings.shape
         assert s == vadetect.VOTE_SEGMENTS, s
-        preds = self._infer(recordings.reshape(p * s, t)).reshape(p, s)
+        flat = recordings.reshape(p * s, t)
+        bucket = _bucket_for(p * s)
+        if bucket > p * s:
+            flat = jnp.pad(flat, ((0, bucket - p * s), (0, 0)))
+        preds = self._runner.classify(flat)[: p * s].reshape(p, s)
         votes = vadetect.vote(preds)
         lat = self.report.latency_s * 1e6 * s  # 6 inferences per diagnosis
         return [

@@ -1,0 +1,48 @@
+"""repro.stream — fleet-scale streaming VA monitoring.
+
+The load-bearing layer between the chip twin (`core.compiler` /
+`core.perf_model`) and the fleet: per-patient IEGM segment sources
+(`sources`), a deadline-aware pad-to-bucket micro-batching scheduler
+with urgent-patient preemption (`scheduler`), a jitted sharded bucketed
+inference runner over the compiled accelerator program (`runner`),
+vectorized per-patient 6-segment vote state machines (`vote`), fleet
+counters (`metrics`), and the virtual-time simulation facade (`fleet`).
+"""
+
+from repro.stream.fleet import FleetConfig, simulate
+from repro.stream.metrics import FleetMetrics
+from repro.stream.runner import FleetRunner, twin_weights
+from repro.stream.scheduler import (
+    PRIORITY_ROUTINE,
+    PRIORITY_URGENT,
+    MicroBatchScheduler,
+    PackedBatch,
+    SchedulerConfig,
+)
+from repro.stream.sources import (
+    SEGMENT_PERIOD_S,
+    FleetSource,
+    RingBuffer,
+    SegmentRef,
+    SourceConfig,
+)
+from repro.stream import vote
+
+__all__ = [
+    "FleetConfig",
+    "FleetMetrics",
+    "FleetRunner",
+    "FleetSource",
+    "MicroBatchScheduler",
+    "PackedBatch",
+    "PRIORITY_ROUTINE",
+    "PRIORITY_URGENT",
+    "RingBuffer",
+    "SEGMENT_PERIOD_S",
+    "SchedulerConfig",
+    "SegmentRef",
+    "SourceConfig",
+    "simulate",
+    "twin_weights",
+    "vote",
+]

@@ -1,0 +1,160 @@
+"""Per-patient continuous IEGM streams for the monitoring fleet.
+
+Two views of the same telemetry, both deterministic in (seed, patient,
+seq) via `data.iegm.segment_batch`'s fold_in keying:
+
+  * `RingBuffer` — the device-side view: raw samples arrive at 250 Hz
+    into a per-patient ring; every 512 accumulated samples close one
+    segment. This is what a single implant's ingest path looks like
+    (`serve.va_service` is the single-patient facade over it).
+  * `FleetSource` — the fleet-side view: a virtual-time arrival process
+    over P patients. Segment k of patient p nominally completes at
+    (k+1) * 2.048 s; per-segment arrival jitter models uplink latency
+    variance and `dropout` models telemetry gaps (a dropped segment
+    never reaches the scheduler — it is a *source* loss, distinct from
+    a scheduler drop, which `stream.scheduler` guarantees never
+    happens). Signal content is materialized lazily in batches so a
+    1000-patient fleet never holds per-patient Python state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import iegm
+
+SEGMENT_PERIOD_S = iegm.RECORD_LEN / iegm.SAMPLE_RATE_HZ  # 2.048 s
+
+
+class RingBuffer:
+    """Sample-level ring buffer: push raw samples, pop full segments.
+
+    Capacity is a whole number of segments; `push` returns every segment
+    completed by the pushed samples (zero or more). Overwrite-on-full
+    drops the *oldest unclosed* samples, mirroring the front-end SRAM.
+    """
+
+    def __init__(self, segments: int = 2, record_len: int = iegm.RECORD_LEN):
+        self.record_len = record_len
+        self._buf = np.zeros(segments * record_len, np.float32)
+        self._write = 0  # total samples ever written
+        self._read = 0  # total samples consumed into segments
+
+    def push(self, samples: np.ndarray) -> list[np.ndarray]:
+        samples = np.asarray(samples, np.float32).ravel()
+        cap = self._buf.size
+        for s in samples:
+            if self._write - self._read >= cap:  # full: drop oldest
+                self._read += 1
+            self._buf[self._write % cap] = s
+            self._write += 1
+        out = []
+        while self._write - self._read >= self.record_len:
+            idx = (self._read + np.arange(self.record_len)) % cap
+            out.append(self._buf[idx].copy())
+            self._read += self.record_len
+        return out
+
+    @property
+    def fill(self) -> int:
+        return self._write - self._read
+
+
+@dataclasses.dataclass(frozen=True)
+class SourceConfig:
+    n_patients: int
+    seed: int = 0
+    va_fraction: float = 0.5  # prior prob. a patient's condition is VA
+    jitter_frac: float = 0.0  # arrival jitter std, fraction of period
+    dropout: float = 0.0  # prob. a segment's telemetry never arrives
+    period_s: float = SEGMENT_PERIOD_S
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentRef:
+    """Metadata of one in-flight segment (signal materialized later)."""
+
+    patient: int
+    seq: int
+    arrival_s: float
+    deadline_s: float
+
+
+# module-level so every FleetSource instance (one per benchmark sweep
+# cell, per test) shares one compiled program per batch shape; seed and
+# va_fraction fold in as traced data (same pattern as iegm._stream_one)
+@jax.jit
+def _signals_jit(seed, patients, seqs, va_fraction):
+    return iegm.segment_batch(
+        seed, patients, seqs, va_fraction=va_fraction
+    )
+
+
+class FleetSource:
+    """Virtual-time arrival process + lazy batched signal materializer."""
+
+    def __init__(self, cfg: SourceConfig, *, deadline_s: float | None = None):
+        self.cfg = cfg
+        # deadline: classify before the patient's next segment completes
+        self.deadline_s = cfg.period_s if deadline_s is None else deadline_s
+
+    def arrivals(self, segments_per_patient: int) -> list[SegmentRef]:
+        """All segment arrivals for the horizon, sorted by arrival time.
+
+        Host-side numpy event process (jitter/dropout), deterministic in
+        the seed; signal *content* stays on the fold_in path so the two
+        never interact.
+        """
+        cfg = self.cfg
+        rng = np.random.default_rng(cfg.seed)
+        p = cfg.n_patients
+        k = segments_per_patient
+        seqs = np.arange(k)
+        nominal = (seqs[None, :] + 1.0) * cfg.period_s  # (1, K)
+        jitter = (
+            rng.normal(0.0, cfg.jitter_frac * cfg.period_s, (p, k))
+            if cfg.jitter_frac > 0
+            else np.zeros((p, k))
+        )
+        t = np.maximum(nominal + jitter, 1e-6)  # (P, K)
+        keep = (
+            rng.random((p, k)) >= cfg.dropout
+            if cfg.dropout > 0
+            else np.ones((p, k), bool)
+        )
+        refs = [
+            SegmentRef(
+                patient=pi,
+                seq=int(seqs[ki]),
+                arrival_s=float(t[pi, ki]),
+                deadline_s=float(t[pi, ki]) + self.deadline_s,
+            )
+            for pi in range(p)
+            for ki in range(k)
+            if keep[pi, ki]
+        ]
+        refs.sort(key=lambda r: (r.arrival_s, r.patient, r.seq))
+        return refs
+
+    def signals(
+        self, patients: np.ndarray, seqs: np.ndarray
+    ) -> dict[str, jax.Array]:
+        """{signal (B, 512), label (B,)} for (patient, seq) rows."""
+        return _signals_jit(
+            jnp.uint32(self.cfg.seed),
+            jnp.asarray(patients, jnp.uint32),
+            jnp.asarray(seqs, jnp.uint32),
+            jnp.float32(self.cfg.va_fraction),
+        )
+
+    def labels(self, patients: np.ndarray) -> jax.Array:
+        """Ground-truth per-patient condition (for accuracy accounting)."""
+        return iegm.patient_labels(
+            self.cfg.seed,
+            jnp.asarray(patients, jnp.uint32),
+            self.cfg.va_fraction,
+        )

@@ -1,0 +1,101 @@
+"""Vectorized per-patient 6-segment majority-vote state machines.
+
+The paper's diagnosis protocol (and `core.vadetect.vote`): every 6
+consecutive segment classifications of one patient are aggregated by
+majority vote, ties breaking toward VA. A fleet of P patients is P
+concurrent state machines; holding them as Python dicts would serialize
+the hot loop, so the whole fleet is three arrays — a (P, 6) prediction
+ring, a (P,) processed-segment counter, and a (P,) last-positive
+counter — and one jitted scatter `update` advances every machine touched
+by a packed batch at once. Diagnosis emission is itself batched: the
+update returns a (P,) emission mask plus the voted diagnoses.
+
+Duplicate patients within one batch are handled exactly: each row's
+ring slot is its patient's counter *plus the row's rank among same-
+patient rows in the batch*, so a backlogged patient draining several
+segments through one bucket still fills consecutive slots. The scatter
+addresses (count + rank) % 6 and the vote fires once at end of batch,
+so one update's rows for a patient must stay inside one vote window —
+rows crossing a 6-boundary would overwrite pre-boundary slots before
+they are voted on. The scheduler enforces exactly that alignment at
+pack time (`next_batch` caps each patient at the remaining slots of
+its current window).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vadetect
+
+VOTE_SEGMENTS = vadetect.VOTE_SEGMENTS  # 6
+URGENT_WINDOW = VOTE_SEGMENTS  # a positive keeps a patient hot for one vote
+
+_NEG = -(2**30)  # "never" sentinel for last_positive
+
+
+class VoteState(NamedTuple):
+    ring: jax.Array  # (P, 6) int32 — last 6 segment predictions
+    count: jax.Array  # (P,) int32 — processed segments per patient
+    last_positive: jax.Array  # (P,) int32 — count at last VA-positive
+
+
+def init(n_patients: int) -> VoteState:
+    return VoteState(
+        ring=jnp.zeros((n_patients, VOTE_SEGMENTS), jnp.int32),
+        count=jnp.zeros((n_patients,), jnp.int32),
+        last_positive=jnp.full((n_patients,), _NEG, jnp.int32),
+    )
+
+
+def _dup_rank(patients: jax.Array, valid: jax.Array) -> jax.Array:
+    """Rank of each row among earlier valid rows of the same patient."""
+    i = jnp.arange(patients.shape[0])
+    same = (patients[:, None] == patients[None, :]) & valid[None, :]
+    return jnp.sum(same & (i[None, :] < i[:, None]), axis=1)
+
+
+@jax.jit
+def update(
+    state: VoteState,
+    patients: jax.Array,  # (B,) int32
+    preds: jax.Array,  # (B,) int32 — 0 non-VA / 1 VA
+    valid: jax.Array,  # (B,) bool — padding mask
+) -> tuple[VoteState, jax.Array, jax.Array, jax.Array]:
+    """Advance the touched state machines by one packed batch.
+
+    Returns (new_state, emit (P,) bool, diagnosis (P,) i32, urgent (P,)
+    bool): `emit[p]` is set when patient p's counter crossed a multiple
+    of 6 in this batch, `diagnosis[p]` is the majority vote over its
+    ring at that point, and `urgent[p]` flags patients whose last
+    positive segment is within the preceding vote window (the
+    scheduler's preemption bitmap).
+    """
+    n_patients = state.ring.shape[0]
+    patients = patients.astype(jnp.int32)
+    preds = preds.astype(jnp.int32)
+    # invalid rows scatter out of range and are dropped
+    p_idx = jnp.where(valid, patients, n_patients)
+    rank = _dup_rank(patients, valid)
+    slot = (state.count[patients] + rank) % VOTE_SEGMENTS
+    ring = state.ring.at[p_idx, slot].set(preds, mode="drop")
+    count = state.count.at[p_idx].add(
+        valid.astype(jnp.int32), mode="drop"
+    )
+    # position (1-based counter value) of each row; positives advance
+    # last_positive via scatter-max, duplicates resolved by max
+    row_pos = state.count[patients] + rank + 1
+    pos_val = jnp.where(valid & (preds == 1), row_pos, _NEG)
+    last_positive = state.last_positive.at[p_idx].max(pos_val, mode="drop")
+    emit = (count // VOTE_SEGMENTS) > (state.count // VOTE_SEGMENTS)
+    diagnosis = vadetect.vote(ring)
+    urgent = (count - last_positive) < URGENT_WINDOW
+    return (
+        VoteState(ring=ring, count=count, last_positive=last_positive),
+        emit,
+        diagnosis,
+        urgent,
+    )

@@ -74,6 +74,63 @@ def test_engine_slots_and_recycling():
         assert r.done and len(r.output) == 4
 
 
+def test_engine_eos_on_first_token_recycles_slot():
+    """Regression: a request finishing on the same tick it was admitted
+    (EOS as its very first generated token) must not leak its slot —
+    later queued requests still get seated and completed."""
+    cfg = configs.reduced("qwen3_8b")
+    model = api.build_model(cfg, tp=1, max_seq=64)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(9), (5,), 0, cfg.vocab)
+    # discover the greedy first token for this prompt
+    probe = E.Request(uid=0, prompt=prompt, max_new=2)
+    eng = E.Engine(model, params, batch_size=1)
+    eng.submit(probe)
+    eng.tick()
+    first = probe.output[0]
+
+    eng = E.Engine(model, params, batch_size=1)
+    eos_reqs = [
+        E.Request(uid=i, prompt=prompt, max_new=8, eos=first)
+        for i in range(1, 4)
+    ]
+    tail = E.Request(uid=9, prompt=prompt, max_new=3)
+    for r in (*eos_reqs, tail):
+        eng.submit(r)
+    eng.run(max_ticks=30)
+    for r in eos_reqs:
+        assert r.done and r.output == [first], r
+    assert tail.done and len(tail.output) == 3
+    # pool fully recycled: no occupied slots, no active flags
+    assert all(s is None for s in eng._slots)
+    assert not bool(eng.active.any())
+
+
+def test_engine_coadmission_does_not_corrupt_seated_slots():
+    """Regression: admitting request B while A is seated re-decodes the
+    whole pool during B's prefill; A's cache must see an idempotent
+    replay of its committed state, not its pending token — A's output
+    must match a solo run."""
+    cfg = configs.reduced("qwen3_8b")
+    model = api.build_model(cfg, tp=1, max_seq=64)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt_a = jax.random.randint(jax.random.PRNGKey(1), (5,), 0, cfg.vocab)
+    prompt_b = jax.random.randint(jax.random.PRNGKey(2), (5,), 0, cfg.vocab)
+
+    solo = E.Engine(model, params, batch_size=2)
+    ra = E.Request(uid=0, prompt=prompt_a, max_new=6)
+    solo.submit(ra)
+    solo.run(max_ticks=20)
+
+    duo = E.Engine(model, params, batch_size=2)
+    ra2 = E.Request(uid=1, prompt=prompt_a, max_new=6)
+    rb = E.Request(uid=2, prompt=prompt_b, max_new=6)
+    duo.submit(ra2)
+    duo.submit(rb)
+    duo.run(max_ticks=20)
+    assert ra2.output == ra.output, (ra2.output, ra.output)
+
+
 def test_quantized_serving_logits_close():
     """int8 weight-only serving keeps the logit surface close to the
     dense path (argmax agreement on a random-init tiny model is noise —
