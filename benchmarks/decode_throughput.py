@@ -1,0 +1,224 @@
+"""Sharded LM decode throughput: tokens/s vs device count, with
+per-device decode-cache memory accounted from the sharded avals.
+
+Two throughput views per (arch, mesh) cell, mirroring how
+BENCH_stream.json pairs wall numbers with the modeled chip fleet:
+
+  * wall — what this host actually sustains through the jitted sharded
+    decode loop. Forced host "devices" share the container's few CPU
+    cores, so wall numbers need not scale with device count;
+  * modeled device fleet — decode is memory-bound: each batched step
+    streams every placed parameter byte plus the pool's decode cache
+    through one device's memory system. Per-device step time is
+    (param + cache bytes per device) / HBM bandwidth, both accounted
+    exactly from the sharded avals (`serve.sharded.DecodePlan`), so
+    tokens/s scales with devices precisely as the placement shrinks the
+    per-device byte footprint — the deployment quantity, and the
+    memory/bandwidth plan the paper's fixed-power datapath story maps
+    onto.
+
+`--smoke` runs the acceptance cells (2 arch families x {1, 8-data,
+4x2-data-model} meshes on 8 forced host devices) and asserts: sharded
+per-device cache bytes < the replicated baseline, modeled tokens/s
+scaling with device count, and valid (guard-checked) placements.
+
+    PYTHONPATH=src python benchmarks/decode_throughput.py [--smoke]
+"""
+
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""
+):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + os.environ.get("XLA_FLAGS", "")
+    ).strip()
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.mesh import make_serving_mesh, parse_mesh_spec
+from repro.models import api
+from repro.serve import sharded as SH
+
+# Nominal HBM bandwidth of one modeled serving device (TPU-class twin).
+# Only ratios across meshes matter for the scaling claim; the absolute
+# tokens/s is a roofline, not a measurement.
+HBM_BW_BYTES_PER_S = 819e9
+
+ARCHS = ("qwen3_8b", "recurrentgemma_2b")  # attention KV + recurrent cache
+
+
+def modeled_tokens_per_s(plan: SH.DecodePlan) -> float:
+    """Memory-bound decode roofline: one pool step streams the placed
+    params + cache once per device; the whole pool advances one token."""
+    step_bytes = plan.param_bytes_per_device + plan.cache_bytes_per_device
+    return plan.batch / (step_bytes / HBM_BW_BYTES_PER_S)
+
+
+def run_cell(
+    model,
+    params,
+    mesh_spec: str,
+    *,
+    batch: int,
+    prompt_len: int,
+    max_new: int,
+    seed: int = 0,
+) -> dict:
+    cfg = model.cfg
+    key = jax.random.PRNGKey(seed)
+    mesh = make_serving_mesh(mesh_spec)
+    plan = SH.plan_decode(model, params, mesh, batch_size=batch)
+    prefill, decode = SH.compile_decode(model, plan)
+    placed = SH.place_params(params, plan)
+    prompts = jax.device_put(
+        jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab),
+        plan.prompts,
+    )
+
+    # warmup: compile both cells outside the timed region
+    logits, cache = prefill(placed, prompts)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    pos = jax.device_put(
+        jnp.full((batch,), prompt_len, jnp.int32), plan.token
+    )
+    logits, cache = decode(placed, cache, tok, pos)
+    logits.block_until_ready()
+
+    # timed: one prefill + max_new decode steps (greedy)
+    t0 = time.monotonic()
+    logits, cache = prefill(placed, prompts)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for t in range(max_new):
+        pos = jax.device_put(
+            jnp.full((batch,), prompt_len + t, jnp.int32), plan.token
+        )
+        logits, cache = decode(placed, cache, tok, pos)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    tok.block_until_ready()
+    dt = time.monotonic() - t0
+
+    return {
+        "arch": cfg.name,
+        "mesh": mesh_spec,
+        "devices": plan.n_devices,
+        "n_data": plan.n_data,
+        "batch": batch,
+        "prompt_len": prompt_len,
+        "max_new": max_new,
+        "wall_s": dt,
+        "wall_tokens_per_s": batch * max_new / dt,
+        "modeled_tokens_per_s": modeled_tokens_per_s(plan),
+        "param_bytes_per_device": plan.param_bytes_per_device,
+        "cache_bytes_per_device": plan.cache_bytes_per_device,
+        "cache_bytes_replicated_baseline": plan.cache_bytes_total,
+        "cache_replication_factor": plan.cache_replication_factor,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="acceptance cells only (CI: scripts/ci.sh)")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--out", default="BENCH_decode.json")
+    args = ap.parse_args()
+
+    mesh_specs = ["1", "8", "4x2"] if args.smoke else [
+        "1", "2", "4", "8", "4x2"
+    ]
+    mesh_specs = [
+        s for s in mesh_specs
+        if (lambda dm: dm[0] * dm[1])(parse_mesh_spec(s))
+        <= jax.device_count()
+    ]
+
+    cells = []
+    for arch in ARCHS:
+        # model/params are mesh-independent: build once per arch
+        cfg = configs.reduced(arch)
+        model = api.build_model(
+            cfg, tp=1, max_seq=args.prompt_len + args.max_new + 2
+        )
+        params = model.init(jax.random.PRNGKey(0))
+        for spec in mesh_specs:
+            cell = run_cell(
+                model, params, spec,
+                batch=args.batch,
+                prompt_len=args.prompt_len,
+                max_new=args.max_new,
+            )
+            cells.append(cell)
+            print(
+                f"[decode_throughput] {cell['arch']:24s} mesh={spec:4s} "
+                f"wall={cell['wall_tokens_per_s']:8.0f} tok/s "
+                f"modeled={cell['modeled_tokens_per_s'] / 1e6:8.2f} Mtok/s "
+                f"cache/dev={cell['cache_bytes_per_device']:8d} B "
+                f"(repl {cell['cache_bytes_replicated_baseline']:8d} B)",
+                flush=True,
+            )
+
+    # device-count scaling per arch (modeled fleet: the deployment
+    # quantity; forced host devices share the CPU, so wall numbers are
+    # reported but not the scaling claim — same policy as BENCH_stream)
+    scaling = []
+    for arch in ARCHS:
+        ac = [c for c in cells if c["arch"] == configs.reduced(arch).name]
+        lo = min(ac, key=lambda c: c["devices"])
+        hi = max(ac, key=lambda c: c["devices"])
+        scaling.append({
+            "arch": lo["arch"],
+            "devices_lo": lo["devices"],
+            "devices_hi": hi["devices"],
+            "modeled_tokens_per_s_lo": lo["modeled_tokens_per_s"],
+            "modeled_tokens_per_s_hi": hi["modeled_tokens_per_s"],
+            "modeled_speedup": hi["modeled_tokens_per_s"]
+            / lo["modeled_tokens_per_s"],
+            "cache_bytes_per_device_lo": lo["cache_bytes_per_device"],
+            "cache_bytes_per_device_hi": hi["cache_bytes_per_device"],
+            "wall_tokens_per_s_lo": lo["wall_tokens_per_s"],
+            "wall_tokens_per_s_hi": hi["wall_tokens_per_s"],
+        })
+
+    rec = {
+        "n_host_devices": jax.device_count(),
+        "hbm_bw_bytes_per_s": HBM_BW_BYTES_PER_S,
+        "reduced_configs": True,
+        "cells": cells,
+        "scaling": scaling,
+    }
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[decode_throughput] -> {args.out}")
+
+    # acceptance: every multi-device placement keeps per-device cache
+    # bytes strictly below the replicated baseline, and the modeled
+    # memory-bound tokens/s scales with device count for every arch
+    for c in cells:
+        if c["devices"] > 1:
+            assert (
+                c["cache_bytes_per_device"]
+                < c["cache_bytes_replicated_baseline"]
+            ), c
+    for s in scaling:
+        if s["devices_hi"] >= 8 * s["devices_lo"]:
+            assert s["modeled_speedup"] > 4.0, s
+        print(
+            f"[decode_throughput] {s['arch']}: modeled "
+            f"{s['modeled_speedup']:.1f}x at {s['devices_hi']} devices "
+            f"(cache/dev {s['cache_bytes_per_device_lo']} -> "
+            f"{s['cache_bytes_per_device_hi']} B)"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -6,7 +6,10 @@ Submits a burst of variable-length requests to the slot-based engine
 (continuous batching), then repeats with int8/int4 weight-only
 quantization — the paper's compressed-storage idea applied to the
 memory-bound decode regime — and reports the token agreement between
-precisions.
+precisions. On a multi-device host (or with
+XLA_FLAGS=--xla_force_host_platform_device_count=8) the same requests
+also run through the mesh-sharded engine (`repro.serve.sharded`) and
+the outputs are compared token-for-token.
 """
 
 import argparse
@@ -17,6 +20,7 @@ import jax.numpy as jnp
 from repro import configs
 from repro.models import api
 from repro.serve import engine as E
+from repro.serve import sharded as SH
 
 
 def main() -> None:
@@ -31,24 +35,54 @@ def main() -> None:
     model = api.build_model(cfg, tp=1, max_seq=96)
     params = model.init(jax.random.PRNGKey(0))
 
+    def make_requests():
+        # variable-length prompts; deterministic so the sharded engine
+        # below can replay the exact same burst for comparison
+        return [
+            E.Request(
+                uid=i,
+                prompt=jax.random.randint(
+                    jax.random.PRNGKey(i), (4 + (i % 4) * 3,), 0,
+                    cfg.vocab,
+                ),
+                max_new=args.max_new,
+            )
+            for i in range(args.requests)
+        ]
+
     # --- slot engine with more requests than slots ----------------------
     eng = E.Engine(model, params, batch_size=args.slots)
-    reqs = []
-    for i in range(args.requests):
-        plen = 4 + (i % 4) * 3  # variable-length prompts
-        reqs.append(E.Request(
-            uid=i,
-            prompt=jax.random.randint(
-                jax.random.PRNGKey(i), (plen,), 0, cfg.vocab
-            ),
-            max_new=args.max_new,
-        ))
-        eng.submit(reqs[-1])
+    reqs = make_requests()
+    for r in reqs:
+        eng.submit(r)
     eng.run()
     print(f"engine: {args.requests} requests over {args.slots} slots")
     for r in reqs:
         print(f"  req {r.uid} (prompt {r.prompt.shape[0]:2d} tok): "
               f"{r.output}")
+
+    # --- sharded engine on a data mesh (token-identical) ----------------
+    n_dev = jax.device_count()
+    if n_dev > 1:
+        from repro.launch.mesh import make_smoke_mesh
+
+        pool = max(args.slots, n_dev)
+        pool += (-pool) % n_dev  # divisible by the data axis
+        seng = SH.ShardedEngine(
+            model, params, batch_size=pool, mesh=make_smoke_mesh(n_dev, 1)
+        )
+        sreqs = make_requests()
+        for r in sreqs:
+            seng.submit(r)
+        seng.run()
+        same = all(a.output == b.output for a, b in zip(reqs, sreqs))
+        plan = seng.plan
+        print(
+            f"sharded engine on {n_dev} devices: outputs "
+            f"{'identical' if same else 'DIFFER'}; cache "
+            f"{plan.cache_bytes_per_device} B/device vs "
+            f"{plan.cache_bytes_total} B replicated"
+        )
 
     # --- quantized serving comparison -----------------------------------
     prompts = jax.random.randint(jax.random.PRNGKey(42), (4, 12), 0,

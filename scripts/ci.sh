@@ -1,8 +1,16 @@
 #!/usr/bin/env bash
 # Tier-1 CI: run the full suite on a forced 8-device host platform so
 # the sharding rules, shard_map collectives, and the multi-device tests
-# in tests/test_dist_multidevice.py are exercised on a >1-device mesh
-# (single-device hosts would silently skip them).
+# (tests/test_dist_multidevice.py, tests/test_decode_multidevice.py)
+# are exercised on a >1-device mesh (single-device hosts would silently
+# skip them). The `slow`-marked multi-device decode tests run here;
+# skip them locally with `pytest -m "not slow"`.
+#
+# Usage: scripts/ci.sh [--smoke] [pytest args...]
+# The benchmark smokes (stream + sharded decode) run in every CI
+# invocation — `--smoke` is accepted explicitly so the documented
+# `scripts/ci.sh --smoke` entry point names what it runs; any other
+# args pass through to pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -12,10 +20,22 @@ cd "$(dirname "$0")/.."
 export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q "$@"
+PYTEST_ARGS=()
+for a in "$@"; do
+  case "$a" in
+    --smoke) ;;  # benchmarks below always run; flag kept for the docs
+    *) PYTEST_ARGS+=("$a") ;;
+  esac
+done
 
-# Streaming-fleet benchmark smoke (tiny sweep + the 1000-patient
-# real-time cell on the same 8 forced host devices) so
-# benchmarks/stream_throughput.py can never bit-rot; it asserts zero
-# scheduler drops and >= real-time sustained throughput.
+python -m pytest -x -q ${PYTEST_ARGS+"${PYTEST_ARGS[@]}"}
+
+# Benchmark smokes on the same 8 forced host devices, so neither can
+# bit-rot:
+#  * stream_throughput — tiny sweep + the 1000-patient real-time cell;
+#    asserts zero scheduler drops and >= real-time sustained throughput.
+#  * decode_throughput — sharded LM decode acceptance cells; asserts
+#    per-device cache bytes < replicated baseline and modeled tokens/s
+#    scaling with device count.
 python benchmarks/stream_throughput.py --smoke --out /tmp/BENCH_stream_ci.json
+python benchmarks/decode_throughput.py --smoke --out /tmp/BENCH_decode_ci.json

@@ -33,6 +33,11 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+class ShardingGuardError(ValueError):
+    """A leaf that must be sharded (strict mode) failed the divisibility
+    guard and would have been silently replicated on every device."""
+
+
 # ---------------------------------------------------------------------------
 # Axis helpers
 # ---------------------------------------------------------------------------
@@ -77,10 +82,18 @@ def _tp_axis(cfg, mesh: Mesh) -> Optional[str]:
 # Parameter rules
 # ---------------------------------------------------------------------------
 
-# in_features -> fsdp, out_features -> tp (column-parallel)
-_COL_PARALLEL = ("wq", "wk", "wv", "w_gate", "w_up")
+# in_features -> fsdp, out_features -> tp (column-parallel). The
+# recurrent-family projections (rg-lru w_x/w_i/w_a, rwkv6
+# w_r/w_k/w_v/w_g/cm_k/cm_r) are column-parallel too: the rg-lru
+# recurrence is elementwise in the hidden dim and rwkv mixes per-head,
+# so splitting their output columns over tp is exact — without these
+# entries the whole recurrent stack replicates and sharded decode's
+# per-device param bytes stop shrinking with the mesh.
+_COL_PARALLEL = ("wq", "wk", "wv", "w_gate", "w_up",
+                 "w_x", "w_i", "w_a", "w_r", "w_k", "w_v", "w_g",
+                 "cm_k", "cm_r")
 # in_features -> tp, out_features -> fsdp (row-parallel)
-_ROW_PARALLEL = ("wo", "w_down")
+_ROW_PARALLEL = ("wo", "w_down", "w_out", "w_o", "cm_v")
 # always replicated (norm scales/biases, linear biases, quant scales)
 _REPLICATED_LEAVES = ("scale", "bias", "b", "meta")
 
@@ -176,17 +189,32 @@ def param_specs(shapes: Any, cfg, mesh: Mesh) -> Any:
 # ---------------------------------------------------------------------------
 
 
-def batch_specs(tree: Any, cfg, mesh: Mesh) -> Any:
+def batch_specs(tree: Any, cfg, mesh: Mesh, *, strict: bool = False) -> Any:
     """Shard the leading (batch) dim of every leaf over the data axes;
     everything else replicated. Leaves whose batch dim the combined
-    data-axis size does not divide stay unsharded."""
+    data-axis size does not divide stay unsharded — or, under
+    `strict=True`, raise `ShardingGuardError` instead of silently
+    replicating (serving paths that size per-device memory from the
+    sharded avals must never fall back to replication)."""
     axes = data_axes(cfg, mesh)
+    n_data = _axis_size(axes, mesh)
 
     def one(leaf):
         shape = getattr(leaf, "shape", ())
         if not shape:
+            if strict and n_data > 1:
+                raise ShardingGuardError(
+                    f"batch_specs(strict): scalar leaf has no batch dim "
+                    f"to shard over data axes {axes} (size {n_data})"
+                )
             return P()
         first = axes if _dim_ok(shape[0], axes, mesh) else None
+        if strict and n_data > 1 and first is None:
+            raise ShardingGuardError(
+                f"batch_specs(strict): batch dim {shape[0]} of leaf "
+                f"shape {tuple(shape)} not divisible by data axes "
+                f"{axes} (size {n_data})"
+            )
         return P(first, *([None] * (len(shape) - 1)))
 
     return jax.tree.map(one, tree)
@@ -195,11 +223,21 @@ def batch_specs(tree: Any, cfg, mesh: Mesh) -> Any:
 _KV_LEAVES = ("k", "v", "k_scale", "v_scale", "cross_k", "cross_v")
 
 
-def cache_specs(cache: Any, cfg, mesh: Mesh) -> Any:
+def cache_specs(cache: Any, cfg, mesh: Mesh, *, strict: bool = False) -> Any:
     """Decode-cache rules: batch dim over the data axes; KV-head dim of
     attention buffers over the model axis. Stacked subtrees ("blocks",
-    "dec") carry a leading layer-group dim before the batch dim."""
+    "dec") carry a leading layer-group dim before the batch dim.
+
+    `strict=True` raises `ShardingGuardError` for any leaf whose batch
+    dim the combined data-axis size does not divide (instead of leaving
+    it silently replicated) — the sharded decode path sizes per-device
+    cache memory from these specs, and a replicated KV buffer would
+    quietly multiply it by the device count. The KV-head/model-axis rule
+    stays best-effort even under strict: a head count the model axis
+    does not divide falls back to batch-only sharding, which is valid
+    (just less memory-efficient along model)."""
     axes = data_axes(cfg, mesh)
+    n_data = _axis_size(axes, mesh)
     tp = _tp_axis(cfg, mesh)
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
     specs = []
@@ -208,8 +246,19 @@ def cache_specs(cache: Any, cfg, mesh: Mesh) -> Any:
         shape = getattr(leaf, "shape", ())
         b_idx = 1 if parts and parts[0] in ("blocks", "dec") else 0
         entries: list[Any] = [None] * len(shape)
-        if len(shape) > b_idx and _dim_ok(shape[b_idx], axes, mesh):
-            entries[b_idx] = axes
+        if len(shape) > b_idx:
+            if _dim_ok(shape[b_idx], axes, mesh):
+                entries[b_idx] = axes
+            elif strict and n_data > 1:
+                raise ShardingGuardError(
+                    f"cache_specs(strict): leaf {'/'.join(parts)} shape "
+                    f"{tuple(shape)} batch dim {shape[b_idx]} (index "
+                    f"{b_idx}) not divisible by data axes {axes} "
+                    f"(size {n_data})"
+                )
+        # leaves with no batch dim (rank <= b_idx, e.g. unbatched step
+        # counters) replicate even under strict: they don't scale with
+        # the pool, so replication is correct and accounting-honest
         h_idx = b_idx + 2  # (B, slots, heads, ...) layout
         if (
             parts[-1] in _KV_LEAVES
@@ -220,6 +269,37 @@ def cache_specs(cache: Any, cfg, mesh: Mesh) -> Any:
             entries[h_idx] = tp
         specs.append(P(*entries))
     return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def spec_shard_factor(spec: P, mesh: Mesh) -> int:
+    """How many ways `spec` splits one array over `mesh` (product of the
+    mesh-axis sizes it names); per-device bytes = nbytes / factor."""
+    return math.prod(_axis_size(entry, mesh) for entry in spec)
+
+
+def bytes_per_device(tree: Any, specs: Any, mesh: Mesh) -> int:
+    """Per-device bytes of `tree` placed with `specs`, accounted from
+    the sharded avals (no allocation): each leaf contributes
+    nbytes / spec_shard_factor. `tree` may hold arrays or
+    ShapeDtypeStructs; `specs` must mirror it leaf-for-leaf (the pytrees
+    `param_specs`/`cache_specs`/`batch_specs` return)."""
+    leaves = jax.tree.leaves(tree)
+    spec_leaves = jax.tree.leaves(
+        specs, is_leaf=lambda s: isinstance(s, P)
+    )
+    if len(leaves) != len(spec_leaves):
+        raise ValueError(
+            f"tree has {len(leaves)} leaves but specs {len(spec_leaves)}"
+        )
+    total = 0
+    for leaf, spec in zip(leaves, spec_leaves):
+        shape = getattr(leaf, "shape", None)
+        dtype = getattr(leaf, "dtype", None)
+        if shape is None or dtype is None:
+            continue
+        nbytes = math.prod(shape) * jax.numpy.dtype(dtype).itemsize
+        total += nbytes // spec_shard_factor(spec, mesh)
+    return total
 
 
 def named(specs: Any, mesh: Mesh) -> Any:

@@ -35,3 +35,29 @@ def make_smoke_mesh(n_data: int = 1, n_model: int = 1) -> jax.sharding.Mesh:
         (n_data, n_model), ("data", "model"),
         axis_types=(jax.sharding.AxisType.Auto,) * 2,
     )
+
+
+def parse_mesh_spec(spec: str) -> tuple[int, int]:
+    """CLI mesh spec -> (n_data, n_model). "8" means 8-way data
+    parallel; "4x2" means data=4, model=2."""
+    parts = spec.lower().split("x")
+    if len(parts) == 1:
+        return int(parts[0]), 1
+    if len(parts) == 2:
+        return int(parts[0]), int(parts[1])
+    raise ValueError(f"mesh spec {spec!r}: expected 'D' or 'DxM'")
+
+
+def make_serving_mesh(spec: str) -> jax.sharding.Mesh:
+    """('D' | 'DxM') -> a ("data", "model") mesh over the first D*M host
+    devices. On a CPU container, force host devices before any jax
+    import: XLA_FLAGS=--xla_force_host_platform_device_count=8."""
+    n_data, n_model = parse_mesh_spec(spec)
+    need, avail = n_data * n_model, jax.device_count()
+    if need > avail:
+        raise SystemExit(
+            f"--mesh {spec} needs {need} devices but only {avail} "
+            f"available; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need}"
+        )
+    return make_smoke_mesh(n_data, n_model)

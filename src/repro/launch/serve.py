@@ -3,6 +3,14 @@
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \\
       --batch 4 --prompt-len 16 --max-new 16 [--quant-bits 8]
   PYTHONPATH=src python -m repro.launch.serve --arch va-cnn --patients 8
+
+Sharded multi-device decode (`repro.serve.sharded`): pass --mesh D or
+DxM to place the decode cache/params on a ("data", "model") mesh; on a
+CPU container force host devices first:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
+      python -m repro.launch.serve --arch qwen3-8b --reduced \\
+      --batch 8 --mesh 4x2
 """
 
 from __future__ import annotations
@@ -14,8 +22,10 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro.launch.mesh import make_serving_mesh
 from repro.models import api
 from repro.serve import engine as E
+from repro.serve import sharded as SH
 
 
 def serve_lm(args) -> None:
@@ -32,8 +42,25 @@ def serve_lm(args) -> None:
     prompts = jax.random.randint(
         key, (args.batch, args.prompt_len), 0, cfg.vocab
     )
-    t0 = time.monotonic()
-    out = E.generate(model, params, prompts, max_new=args.max_new)
+    if args.mesh:
+        mesh = make_serving_mesh(args.mesh)
+        plan = SH.plan_decode(model, params, mesh, batch_size=args.batch)
+        print(
+            f"[serve] mesh {dict(zip(mesh.axis_names, mesh.devices.shape))}: "
+            f"cache {plan.cache_bytes_per_device / 1e3:.1f} kB/device "
+            f"(replicated would be {plan.cache_bytes_total / 1e3:.1f} kB), "
+            f"params {plan.param_bytes_per_device / 1e3:.1f} kB/device"
+        )
+        t0 = time.monotonic()
+        out = SH.sharded_generate(
+            model, params, prompts, mesh=mesh, max_new=args.max_new,
+            plan=plan,
+        )
+        out.block_until_ready()
+    else:
+        t0 = time.monotonic()
+        out = E.generate(model, params, prompts, max_new=args.max_new)
+        out.block_until_ready()
     dt = time.monotonic() - t0
     n_tok = args.batch * args.max_new
     print(f"[serve] {cfg.name}: {out.shape} tokens in {dt:.2f}s "
@@ -72,6 +99,9 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--quant-bits", type=int, default=None)
+    ap.add_argument("--mesh", default=None,
+                    help="shard decode on a device mesh: 'D' or 'DxM' "
+                         "(data x model), e.g. --mesh 8 or --mesh 4x2")
     ap.add_argument("--patients", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()

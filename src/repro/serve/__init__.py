@@ -1,5 +1,26 @@
-"""Serving substrate: batched LM engine + the paper's VA diagnosis service."""
+"""Serving substrate: batched LM engine (single-device + mesh-sharded)
+and the paper's VA diagnosis service."""
 
-from repro.serve import engine, va_service
+from repro.serve import engine, sharded, va_service
+from repro.serve.engine import Engine, Request, generate
+from repro.serve.sharded import (
+    DecodePlan,
+    ShardedEngine,
+    compile_decode,
+    plan_decode,
+    sharded_generate,
+)
 
-__all__ = ["engine", "va_service"]
+__all__ = [
+    "engine",
+    "sharded",
+    "va_service",
+    "Engine",
+    "Request",
+    "generate",
+    "DecodePlan",
+    "ShardedEngine",
+    "compile_decode",
+    "plan_decode",
+    "sharded_generate",
+]

@@ -30,6 +30,11 @@ _QUANT_TARGETS = (
     "w_x", "w_out",
 )
 
+# block kinds whose decode cache advances on every step (hidden-state
+# recurrences): replaying a committed (token, pos) is NOT idempotent
+# for them, unlike position-indexed attention KV writes
+_RECURRENT_KINDS = ("rglru", "rwkv")
+
 
 def quantize_for_serving(params: Any, bits: int = 8) -> Any:
     """Dense master params -> packed mixed-bit-width serving params."""
@@ -58,28 +63,65 @@ class Request:
 
 
 class Engine:
-    """Slot-based batched decoder around a Model."""
+    """Slot-based batched decoder around a Model.
+
+    Array placement and decode compilation go through overridable hooks
+    (`_place_params` / `_place_cache` / `_place_batch` /
+    `_compile_decode`) so `serve.sharded.ShardedEngine` can pin every
+    pool array to a device mesh while inheriting the slot semantics —
+    admission, EOS-on-first-token, committed-(token,pos) replay —
+    unchanged."""
 
     def __init__(self, model: Model, params: Any, *, batch_size: int,
                  greedy: bool = True):
+        kinds = tuple(model.cfg.pattern) + tuple(model.cfg.tail or ())
+        if batch_size > 1 and any(k in _RECURRENT_KINDS for k in kinds):
+            # co-admission prefill replays seated slots' committed
+            # (token, pos); recurrent hidden states advance on every
+            # step, so the replay would silently corrupt them. A
+            # 1-slot pool has no co-seated slots and stays correct;
+            # batched recurrent decode goes through `generate` /
+            # `sharded.sharded_generate` (no replay) until the engine
+            # seats via per-slot cache scatter (see ROADMAP).
+            raise ValueError(
+                f"slot engine with batch_size={batch_size} does not "
+                f"support recurrent-cache models ({model.cfg.name}: "
+                f"{kinds}); prefill replay is only idempotent for "
+                f"attention caches"
+            )
         self.model = model
-        self.params = params
+        self.params = self._place_params(params)
         self.batch = batch_size
         self.greedy = greedy
-        self._decode = jax.jit(model.decode_step)
+        self._decode = self._compile_decode()
         self._queue: list[Request] = []
         self._slots: list[Optional[Request]] = [None] * batch_size
-        self.cache = model.init_cache(batch_size)
-        self.pos = jnp.zeros((batch_size,), jnp.int32)
-        self.tokens = jnp.zeros((batch_size,), jnp.int32)
-        self.active = jnp.zeros((batch_size,), bool)
+        self.cache = self._place_cache(model.init_cache(batch_size))
+        zi = lambda: self._place_batch(jnp.zeros((batch_size,), jnp.int32))
+        self.pos = zi()
+        self.tokens = zi()
+        self.active = self._place_batch(jnp.zeros((batch_size,), bool))
         # last (token, pos) actually written into each slot's cache.
         # `tokens`/`pos` hold the *pending* decode input (the generated
         # token not yet in the cache); prefill's pool-wide decode steps
         # must re-feed other slots their committed state, not the
         # pending one, or they would corrupt seated slots' caches.
-        self._ctok = jnp.zeros((batch_size,), jnp.int32)
-        self._cpos = jnp.zeros((batch_size,), jnp.int32)
+        self._ctok = zi()
+        self._cpos = zi()
+
+    # -- placement / compilation hooks (identity on a single device) --------
+
+    def _place_params(self, params: Any) -> Any:
+        return params
+
+    def _place_cache(self, cache: Any) -> Any:
+        return cache
+
+    def _place_batch(self, x: jax.Array) -> jax.Array:
+        return x
+
+    def _compile_decode(self) -> Callable:
+        return jax.jit(self.model.decode_step)
 
     def submit(self, req: Request) -> None:
         if req.prompt.shape[0] == 0:

@@ -1,0 +1,270 @@
+"""Sharded multi-host LM decode: the serving engine on a device mesh.
+
+`serve.engine` runs prefill + slot-based continuous decode on one
+device. This module places the same computation on a `launch.mesh`-style
+mesh: parameters with `dist.sharding.param_specs` (FSDP rows / TP
+columns), the decode KV/recurrent caches with `cache_specs` (batch over
+`data`, KV heads over `model`), and the per-slot token/pos arrays with
+`batch_specs` — all under the strict divisibility guard, so per-device
+memory really is total/shards and never silently replicated. Prefill
+and decode steps are jit-compiled with explicit in/out shardings; the
+cache never leaves its placement between steps.
+
+Why this is the throughput story: decode is memory-bound — each token
+reads every (placed) parameter byte plus the slot's cache — so the
+per-device byte footprint from the sharded avals *is* the modeled step
+time, and tokens/s scales with devices exactly as those bytes shrink
+(`benchmarks/decode_throughput.py` accounts it; `DecodePlan` exposes
+the numbers).
+
+Layers:
+
+  * `plan_decode`     — specs + shardings + per-device byte accounting
+                        for one (model, mesh, pool size), no allocation;
+  * `compile_decode`  — jitted prefill/decode with explicit shardings;
+  * `sharded_generate`— batched generate (one prefill + N decode steps),
+                        the multi-device twin of `engine.generate`;
+  * `ShardedEngine`   — `engine.Engine` with every pool array pinned to
+                        the mesh; slot admission, EOS-on-first-token and
+                        committed-(token,pos) idempotent prefill replay
+                        are inherited, not reimplemented.
+
+On a data-only mesh the sharded pool is token-for-token identical to
+the single-device engine (each device runs whole rows, same reduction
+order); with a model axis, row-parallel contractions psum partial
+products, so logits agree only to fp tolerance and greedy argmax can
+flip on near-uniform (e.g. random-init) logits —
+`tests/test_decode_multidevice.py` pins both contracts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models.api import Model
+from repro.serve.engine import Engine
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodePlan:
+    """Placement plan for one (model, mesh, pool size): every sharding
+    the decode path needs, plus per-device memory accounted from the
+    sharded avals (what an allocator would reserve, with no allocation
+    here)."""
+
+    mesh: Mesh
+    batch: int
+    n_devices: int
+    n_data: int  # combined data-axis size (pool rows per device = batch/n_data)
+    params: Any  # NamedSharding pytree for the parameters
+    cache: Any  # NamedSharding pytree for the decode cache
+    token: NamedSharding  # (B,) arrays: tokens, pos, active masks
+    logits: NamedSharding  # (B, V) decode/prefill logits
+    prompts: NamedSharding  # (B, S) prefill token batch
+    param_bytes_per_device: int
+    cache_bytes_per_device: int
+    param_bytes_total: int
+    cache_bytes_total: int
+
+    @property
+    def cache_replication_factor(self) -> float:
+        """1.0 = perfectly sharded; n_devices = fully replicated."""
+        per_dev_if_perfect = self.cache_bytes_total / self.n_devices
+        return self.cache_bytes_per_device / max(per_dev_if_perfect, 1)
+
+
+def plan_decode(
+    model: Model, params: Any, mesh: Mesh, *, batch_size: int,
+    strict: bool = True,
+) -> DecodePlan:
+    """Build the placement plan. `params` may be the real tree or its
+    eval_shape aval tree — only shapes/dtypes are read. `strict=True`
+    (the default) refuses a pool whose cache cannot shard its batch dim,
+    instead of silently replicating it per device."""
+    cfg = model.cfg
+    axes = shd.data_axes(cfg, mesh)
+    n_data = shd._axis_size(axes, mesh)
+    n_dev = math.prod(mesh.devices.shape)
+    if batch_size % max(n_data, 1):
+        raise shd.ShardingGuardError(
+            f"decode pool batch_size={batch_size} not divisible by the "
+            f"mesh data axes {axes} (size {n_data})"
+        )
+    param_avals = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params
+    )
+    cache_avals = jax.eval_shape(lambda: model.init_cache(batch_size))
+    pspecs = shd.param_specs(param_avals, cfg, mesh)
+    cspecs = shd.cache_specs(cache_avals, cfg, mesh, strict=strict)
+    # slot token/pos and (B, V)/(B, S) batches share the batch rules —
+    # the divisibility check above already guarantees strict passes
+    bspecs = shd.batch_specs(
+        {
+            "token": jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+            "row": jax.ShapeDtypeStruct((batch_size, 1), jnp.int32),
+        },
+        cfg, mesh, strict=strict,
+    )
+    replicated = jax.tree.map(lambda s: P(*([None] * len(s))), cspecs,
+                              is_leaf=lambda s: isinstance(s, P))
+    return DecodePlan(
+        mesh=mesh,
+        batch=batch_size,
+        n_devices=n_dev,
+        n_data=n_data,
+        params=shd.named(pspecs, mesh),
+        cache=shd.named(cspecs, mesh),
+        token=NamedSharding(mesh, bspecs["token"]),
+        logits=NamedSharding(mesh, bspecs["row"]),
+        prompts=NamedSharding(mesh, bspecs["row"]),
+        param_bytes_per_device=shd.bytes_per_device(
+            param_avals, pspecs, mesh
+        ),
+        cache_bytes_per_device=shd.bytes_per_device(
+            cache_avals, cspecs, mesh
+        ),
+        param_bytes_total=shd.bytes_per_device(
+            param_avals,
+            jax.tree.map(lambda s: P(*([None] * len(s))), pspecs,
+                         is_leaf=lambda s: isinstance(s, P)),
+            mesh,
+        ),
+        cache_bytes_total=shd.bytes_per_device(
+            cache_avals, replicated, mesh
+        ),
+    )
+
+
+def compile_decode(
+    model: Model, plan: DecodePlan
+) -> Tuple[Callable, Callable]:
+    """(prefill, decode_step) jit-compiled with explicit in/out
+    shardings from `plan`. The cache argument/result keeps the
+    `cache_specs` placement across every step, so decode never migrates
+    the pool's persistent state."""
+    if model.cfg.is_enc_dec:
+        raise ValueError(
+            "sharded decode drives the decoder-only path; enc-dec "
+            "models need a frames-aware prefill (not wired yet)"
+        )
+    prefill = jax.jit(
+        model.prefill,
+        in_shardings=(plan.params, plan.prompts),
+        out_shardings=(plan.logits, plan.cache),
+    )
+    decode = jax.jit(
+        model.decode_step,
+        in_shardings=(plan.params, plan.cache, plan.token, plan.token),
+        out_shardings=(plan.logits, plan.cache),
+    )
+    return prefill, decode
+
+
+def place_params(params: Any, plan: DecodePlan) -> Any:
+    return jax.device_put(params, plan.params)
+
+
+def sharded_generate(
+    model: Model,
+    params: Any,
+    prompts: jax.Array,  # (B, S) int32 — same-length batch
+    *,
+    mesh: Mesh,
+    max_new: int,
+    params_placed: bool = False,
+    plan: Optional[DecodePlan] = None,
+) -> jax.Array:
+    """Multi-device `engine.generate`: one sharded prefill + `max_new`
+    sharded greedy decode steps. Returns (B, max_new) int32."""
+    b, s = prompts.shape
+    if plan is None:
+        plan = plan_decode(model, params, mesh, batch_size=b)
+    if plan.batch != b:
+        raise ValueError(f"plan batch {plan.batch} != prompts batch {b}")
+    prefill, decode = compile_decode(model, plan)
+    if not params_placed:
+        params = place_params(params, plan)
+    prompts = jax.device_put(
+        jnp.asarray(prompts, jnp.int32), plan.prompts
+    )
+    last_logits, cache = prefill(params, prompts)
+    outs = []
+    tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    for t in range(max_new):
+        outs.append(tok)
+        pos = jax.device_put(
+            jnp.full((b,), s + t, jnp.int32), plan.token
+        )
+        logits, cache = decode(
+            params, cache, jax.device_put(tok, plan.token), pos
+        )
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.stack(outs, axis=1)
+
+
+class ShardedEngine(Engine):
+    """The PR 2 slot engine with its pool pinned to a mesh.
+
+    Everything behavioral — queue admission, per-request prefill replay
+    through pool-wide decode steps, EOS-on-first-token slot recycling,
+    committed-(token,pos) idempotent rewrites for seated slots — is
+    inherited from `Engine`; this class only overrides *where arrays
+    live*: params/cache/slot-state are device_put to the plan's
+    shardings at init, and the jitted decode carries explicit in/out
+    shardings so the cache round-trips without migrating. Host-side
+    `.at[].set` slot updates preserve the committed sharding; the step
+    wrapper re-pins token/pos anyway (jit with explicit in_shardings
+    rejects, rather than reshards, mismatched committed arrays)."""
+
+    def __init__(self, model: Model, params: Any, *, batch_size: int,
+                 mesh: Mesh, greedy: bool = True,
+                 strict: bool = True):
+        # the plan must exist before Engine.__init__ runs the hooks
+        self.mesh = mesh
+        self.plan = plan_decode(
+            model, params, mesh, batch_size=batch_size, strict=strict
+        )
+        super().__init__(
+            model, params, batch_size=batch_size, greedy=greedy
+        )
+
+    def _place_params(self, params: Any) -> Any:
+        return jax.device_put(params, self.plan.params)
+
+    def _place_cache(self, cache: Any) -> Any:
+        return jax.device_put(cache, self.plan.cache)
+
+    def _place_batch(self, x: jax.Array) -> jax.Array:
+        return jax.device_put(x, self.plan.token)
+
+    def _compile_decode(self) -> Callable:
+        plan = self.plan
+        _, decode = compile_decode(self.model, plan)
+
+        def step(params, cache, tok, pos):
+            return decode(
+                params, cache,
+                jax.device_put(tok, plan.token),
+                jax.device_put(pos, plan.token),
+            )
+
+        return step
+
+    @property
+    def n_devices(self) -> int:
+        return self.plan.n_devices
+
+    @property
+    def cache_bytes_per_device(self) -> int:
+        return self.plan.cache_bytes_per_device
+
+    @property
+    def param_bytes_per_device(self) -> int:
+        return self.plan.param_bytes_per_device

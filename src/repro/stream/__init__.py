@@ -25,6 +25,7 @@ from repro.stream.sources import (
     RingBuffer,
     SegmentRef,
     SourceConfig,
+    advance_virtual_time,
 )
 from repro.stream import vote
 
@@ -42,6 +43,7 @@ __all__ = [
     "SchedulerConfig",
     "SegmentRef",
     "SourceConfig",
+    "advance_virtual_time",
     "simulate",
     "twin_weights",
     "vote",

@@ -39,6 +39,7 @@ from repro.stream.sources import (
     SEGMENT_PERIOD_S,
     FleetSource,
     SourceConfig,
+    advance_virtual_time,
 )
 
 
@@ -54,6 +55,9 @@ class FleetConfig:
     max_wait_s: float = 0.256
     path: str = "twin"
     pregen: bool = True
+    # segment completion period; non-default values are for stress tests
+    # (e.g. adversarially large virtual times exercising fp boundaries)
+    period_s: float = SEGMENT_PERIOD_S
 
     def source_config(self) -> SourceConfig:
         return SourceConfig(
@@ -62,6 +66,7 @@ class FleetConfig:
             va_fraction=self.va_fraction,
             jitter_frac=self.jitter_frac,
             dropout=self.dropout,
+            period_s=self.period_s,
         )
 
     def scheduler_config(self) -> SchedulerConfig:
@@ -156,8 +161,11 @@ def simulate(
         if not drain and not sched.should_flush(now):
             # advance virtual time to the next trigger: the next arrival
             # or the oldest queued segment aging past max_wait; if the
-            # trigger cannot move time forward (fp boundary), fall
-            # through and pack instead of spinning
+            # trigger cannot move time forward (fp boundary: at large
+            # virtual times `oldest + max_wait` can round to <= now),
+            # fall through and pack instead of spinning —
+            # `should_flush`'s ulp-relative tolerance makes the two
+            # sides of this boundary agree
             t_next = refs[i].arrival_s
             if sched.ready():
                 t_next = min(
@@ -186,7 +194,10 @@ def simulate(
         sched.set_urgent(np.asarray(urgent))
 
         service = runner.batch_service_s(batch.bucket)
-        completion = now + service
+        # forced minimum progress: at adversarially large virtual times
+        # `now + service` can round back to exactly `now` (service below
+        # one ulp), freezing completion times for the rest of the run
+        completion = advance_virtual_time(now, now + service)
         now = completion
         valid = batch.valid
         np.add.at(
@@ -229,7 +240,7 @@ def simulate(
     )
     # required aggregate real-time rate: one 512-sample segment per
     # patient per segment period (2.048 s at the paper's front end)
-    required_rate = cfg.n_patients / SEGMENT_PERIOD_S
+    required_rate = cfg.n_patients / cfg.period_s
     summ = metrics.summary()
     return {
         "config": {

@@ -136,10 +136,16 @@ class MicroBatchScheduler:
             return False
         if len(self._queue) >= self.cfg.buckets[-1]:
             return True
-        # epsilon guards the fp boundary now == oldest + max_wait, where
-        # (oldest + max_wait) - oldest can round below max_wait and
-        # livelock a virtual-time loop that advances `now` to the trigger
-        return now_s - self.oldest_arrival() >= self.cfg.max_wait_s - 1e-9
+        # tolerance guards the fp boundary now == oldest + max_wait,
+        # where (oldest + max_wait) - oldest can round below max_wait
+        # and livelock a virtual-time loop that advances `now` to the
+        # trigger. The rounding error is an ulp of the *operand
+        # magnitude* — at large virtual times (adversarial jitter, long
+        # horizons) it dwarfs any fixed epsilon — so the tolerance is a
+        # few ulp of the larger operand, floored at the old 1e-9.
+        oldest = self.oldest_arrival()
+        tol = max(1e-9, 4.0 * np.spacing(max(abs(now_s), abs(oldest))))
+        return now_s - oldest >= self.cfg.max_wait_s - tol
 
     # -- packing ------------------------------------------------------------
 

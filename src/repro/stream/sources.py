@@ -30,6 +30,24 @@ from repro.data import iegm
 SEGMENT_PERIOD_S = iegm.RECORD_LEN / iegm.SAMPLE_RATE_HZ  # 2.048 s
 
 
+def advance_virtual_time(now_s: float, target_s: float) -> float:
+    """Monotone advance for virtual-time event loops: max(target,
+    nextafter(now)) — strictly greater than `now_s` even when fp
+    cancellation rounds `target_s` at or below it.
+
+    The boundary this guards: a loop that derives a trigger like
+    `oldest + max_wait` and then re-tests `now - oldest >= max_wait`
+    can livelock, because `(a + b) - a >= b` is not guaranteed in
+    float64 — and at large virtual times (days of 2.048 s segments, or
+    adversarial jitter pushing arrivals far out) the rounding error is
+    an *ulp of the magnitude*, far larger than any fixed epsilon. Every
+    advance-time assignment in `fleet.simulate` goes through here so
+    accumulated float jitter can never stall the event loop; the flush
+    predicate side is `scheduler.should_flush`'s ulp-relative
+    tolerance."""
+    return max(float(target_s), float(np.nextafter(now_s, np.inf)))
+
+
 class RingBuffer:
     """Sample-level ring buffer: push raw samples, pop full segments.
 

@@ -53,10 +53,21 @@ def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
 
 def given(**strats):
     def deco(fn):
-        # NOTE: zero-arg wrapper, and no functools.wraps — copying
-        # __wrapped__ would make pytest read fn's signature and demand
-        # fixtures named after the strategy kwargs.
-        def wrapper():
+        # NOTE: no functools.wraps — copying __wrapped__ would make
+        # pytest read fn's full signature and demand fixtures named
+        # after the strategy kwargs. Instead the wrapper advertises
+        # only fn's NON-strategy parameters (via __signature__), so
+        # pytest still injects real fixtures (matching hypothesis'
+        # fixtures-plus-strategies behavior) while the strategy kwargs
+        # come from the drawn examples.
+        import inspect
+
+        fixture_params = [
+            p for name, p in inspect.signature(fn).parameters.items()
+            if name not in strats
+        ]
+
+        def wrapper(**fixtures):
             rng = random.Random(_SEED)
             n = getattr(wrapper, "_stub_max_examples", _DEFAULT_EXAMPLES)
             ran = 0
@@ -65,11 +76,12 @@ def given(**strats):
                     break
                 drawn = {k: s.draw(rng) for k, s in strats.items()}
                 try:
-                    fn(**drawn)
+                    fn(**fixtures, **drawn)
                 except _Assumption:
                     continue  # assume() rejected the example: resample
                 ran += 1
 
+        wrapper.__signature__ = inspect.Signature(fixture_params)
         wrapper.__name__ = fn.__name__
         wrapper.__doc__ = fn.__doc__
         wrapper.__module__ = fn.__module__

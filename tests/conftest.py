@@ -17,3 +17,12 @@ except ImportError:  # container has no hypothesis: deterministic stub
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-device decode equivalence tests — CI "
+        "(scripts/ci.sh, 8 forced host devices) runs them; skip "
+        "locally with -m 'not slow'",
+    )

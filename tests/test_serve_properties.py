@@ -1,0 +1,167 @@
+"""Property tests for the serving engine's slot admission machinery.
+
+Random interleavings of submit / tick (hypothesis; deterministic stub
+in CI) must never exceed slot capacity, never starve an admitted
+request, and keep the committed-(token,pos) replay contract: re-feeding
+the pool its committed state is a bitwise no-op on the cache. These are
+the invariants `serve.sharded.ShardedEngine` inherits wholesale, so
+they are pinned here once, on the cheap single-device engine.
+
+The replay no-op holds for attention caches (position-indexed writes
+are idempotent); recurrent caches advance state on every step and are
+exercised via the generate path instead (`test_decode_multidevice`).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import configs
+from repro.models import api
+from repro.serve import engine as E
+
+CFG = configs.reduced("qwen3_8b")
+
+
+@pytest.fixture(scope="module")
+def built():
+    model = api.build_model(CFG, tp=1, max_seq=64)
+    params = model.init(jax.random.PRNGKey(0))
+    # one shared jitted decode so hypothesis examples don't retrace
+    decode = jax.jit(model.decode_step)
+
+    class FastEngine(E.Engine):
+        def _compile_decode(self):
+            return decode
+
+    return model, params, FastEngine
+
+
+def _occupied(eng):
+    return [i for i, s in enumerate(eng._slots) if s is not None]
+
+
+def _check_invariants(eng):
+    occ = _occupied(eng)
+    assert len(occ) <= eng.batch
+    active = np.asarray(eng.active)
+    # active flags mirror occupancy exactly — a leaked flag would make
+    # tick() advance a free slot and corrupt the next tenant's prefill
+    assert sorted(np.nonzero(active)[0].tolist()) == occ
+    for i in occ:
+        req = eng._slots[i]
+        assert not req.done
+        assert 1 <= len(req.output) < req.max_new
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    batch_size=st.sampled_from([1, 2]),
+    n_reqs=st.integers(1, 5),
+    seed=st.integers(0, 10_000),
+)
+def test_random_interleavings_keep_slot_invariants(
+    built, batch_size, n_reqs, seed
+):
+    model, params, FastEngine = built
+    rng = np.random.default_rng(seed)
+    eng = FastEngine(model, params, batch_size=batch_size)
+    reqs = [
+        E.Request(
+            uid=i,
+            prompt=jax.random.randint(
+                jax.random.PRNGKey(seed + i),
+                (int(rng.integers(1, 5)),), 0, CFG.vocab,
+            ),
+            max_new=int(rng.integers(1, 4)),
+        )
+        for i in range(n_reqs)
+    ]
+    pending = list(reqs)
+    steps = 0
+    while (pending or eng._queue or _occupied(eng)) and steps < 200:
+        steps += 1
+        if pending and (rng.random() < 0.5 or not eng._queue):
+            for _ in range(int(rng.integers(1, 3))):
+                if pending:
+                    eng.submit(pending.pop(0))
+        eng.tick()
+        _check_invariants(eng)
+    # no starvation: every submitted request completed within the
+    # interleaving horizon, with a well-formed output
+    assert steps < 200
+    for r in reqs:
+        assert r.done, r.uid
+        assert 1 <= len(r.output) <= r.max_new
+        if len(r.output) < r.max_new:
+            assert r.eos is not None and r.output[-1] == r.eos
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_committed_replay_is_bitwise_noop_on_cache(built, seed):
+    """After any admission state, decoding the pool with its committed
+    (token, pos) — exactly what co-admission prefill does to seated
+    slots — must leave every cache leaf bit-identical."""
+    model, params, FastEngine = built
+    rng = np.random.default_rng(seed)
+    eng = FastEngine(model, params, batch_size=2)
+    for i in range(2):
+        eng.submit(E.Request(
+            uid=i,
+            prompt=jax.random.randint(
+                jax.random.PRNGKey(seed + i),
+                (int(rng.integers(1, 5)),), 0, CFG.vocab,
+            ),
+            max_new=6,
+        ))
+    for _ in range(int(rng.integers(1, 4))):
+        eng.tick()
+    before = jax.tree.map(np.asarray, eng.cache)
+    _, replayed = eng._decode(
+        eng.params, eng.cache, eng._ctok, eng._cpos
+    )
+    after = jax.tree.map(np.asarray, replayed)
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_rejects_batched_recurrent_models():
+    """Recurrent caches advance on every step, so co-admission replay
+    would silently corrupt seated slots: the slot engine must refuse
+    them at batch_size > 1 (single-slot pools have no co-seated slots
+    and stay legal; batched decode goes through `generate`)."""
+    cfg = configs.reduced("recurrentgemma_2b")
+    model = api.build_model(cfg, tp=1, max_seq=32)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="recurrent"):
+        E.Engine(model, params, batch_size=2)
+    eng = E.Engine(model, params, batch_size=1)  # 1-slot pool is fine
+    assert eng.batch == 1
+
+
+def test_replaying_whole_prefill_is_idempotent(built):
+    """Replaying an entire committed prompt through `_step_single` (the
+    retransmission path: same tokens, same positions) leaves the cache
+    bit-identical and does not disturb the slot's pending state."""
+    model, params, FastEngine = built
+    eng = FastEngine(model, params, batch_size=2)
+    prompt = jax.random.randint(jax.random.PRNGKey(7), (5,), 0, CFG.vocab)
+    req = E.Request(uid=0, prompt=prompt, max_new=8)
+    eng.submit(req)
+    eng.tick()  # admit (prefill) + first pool tick
+    before_cache = jax.tree.map(np.asarray, eng.cache)
+    pending = (int(eng.tokens[0]), int(eng.pos[0]))
+    # replay the committed prompt positions for slot 0
+    slot_tok = int(eng._ctok[0])
+    slot_pos = int(eng._cpos[0])
+    eng._step_single(0, slot_tok, slot_pos)
+    after_cache = jax.tree.map(np.asarray, eng.cache)
+    for a, b in zip(
+        jax.tree.leaves(before_cache), jax.tree.leaves(after_cache)
+    ):
+        np.testing.assert_array_equal(a, b)
+    assert (int(eng.tokens[0]), int(eng.pos[0])) == pending

@@ -1,0 +1,199 @@
+"""Property tests for `dist.sharding` cache/batch spec rules.
+
+The contract the sharded decode path relies on: for ANY generated cache
+pytree and mesh shape, the returned specs are divisibility-valid (every
+named axis divides the dim it shards), and under `strict=True` a leaf
+that cannot shard its batch dim raises `ShardingGuardError` instead of
+silently replicating — per-device memory accounting is only honest if
+replication can never happen behind the guard's back.
+
+The spec functions are pure over (shapes, mesh.shape, mesh.axis_names),
+so a duck-typed mesh lets hypothesis sweep mesh geometries far beyond
+the host's real device count; `tests/test_dist_multidevice.py` covers
+the same rules on real multi-device meshes.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.dist.sharding import ShardingGuardError
+
+
+class _FakeMesh:
+    """Duck-typed mesh: `.shape` (name -> size) and `.axis_names` are
+    all the spec rules read."""
+
+    def __init__(self, **axes: int):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Cfg:
+    use_tp: bool = True
+    fsdp: bool = True
+
+
+def _sds(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _cache_tree(g, b, s, h, dh, r):
+    """The shapes `models.transformer.init_cache` produces: stacked
+    "blocks" subtrees with a leading layer-group dim, KV buffers in
+    (G, B, S, H, Dh) layout, plus batch-leading "tail" leaves."""
+    return {
+        "blocks": {
+            "pos0": {
+                "attn": {
+                    "k": _sds(g, b, s, h, dh),
+                    "v": _sds(g, b, s, h, dh),
+                    "slot_pos": _sds(g, b, s),
+                }
+            }
+        },
+        "tail": {"pos0": {"rec": {"h": _sds(b, r), "conv": _sds(b, 3, r)}}},
+    }
+
+
+def _assert_valid(tree, specs, mesh):
+    leaves = jax.tree.leaves(tree)
+    spec_leaves = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    assert len(leaves) == len(spec_leaves)
+    for leaf, spec in zip(leaves, spec_leaves):
+        assert len(spec) == len(leaf.shape), (spec, leaf.shape)
+        for dim, entry in zip(leaf.shape, spec):
+            size = shd._axis_size(entry, mesh)
+            assert dim % size == 0, (leaf.shape, spec, entry)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n_data=st.integers(1, 8),
+    n_model=st.integers(1, 4),
+    use_tp=st.booleans(),
+    batch=st.integers(1, 48),
+    heads=st.integers(1, 9),
+    groups=st.integers(1, 3),
+    slots=st.sampled_from([4, 16, 64]),
+)
+def test_cache_specs_valid_or_guarded(
+    n_data, n_model, use_tp, batch, heads, groups, slots
+):
+    mesh = _FakeMesh(data=n_data, model=n_model)
+    cfg = _Cfg(use_tp=use_tp)
+    tree = _cache_tree(groups, batch, slots, heads, 8, 24)
+    data_size = shd._axis_size(shd.data_axes(cfg, mesh), mesh)
+    divisible = batch % data_size == 0
+
+    # non-strict: always returns, always divisibility-valid
+    specs = shd.cache_specs(tree, cfg, mesh)
+    _assert_valid(tree, specs, mesh)
+
+    if not divisible and data_size > 1:
+        # strict: the guard fires — never a silently replicated leaf
+        with pytest.raises(ShardingGuardError):
+            shd.cache_specs(tree, cfg, mesh, strict=True)
+        return
+
+    strict_specs = shd.cache_specs(tree, cfg, mesh, strict=True)
+    assert strict_specs == specs
+    # every leaf's batch dim really is sharded over the data axes: the
+    # per-device cache accounting divides by these factors, so none may
+    # silently replicate
+    if data_size > 1:
+        flat, _ = jax.tree_util.tree_flatten_with_path(specs)
+        for kp, spec in flat:
+            parts = shd._path_str(kp).split("/")
+            b_idx = 1 if parts[0] in ("blocks", "dec") else 0
+            assert spec[b_idx] is not None, (parts, spec)
+            assert shd.spec_shard_factor(spec, mesh) >= data_size
+
+    # KV head rule: sharded over model iff tp is on and heads divide
+    # (a size-1 model axis divides trivially and may be named — harmless)
+    k_spec = specs["blocks"]["pos0"]["attn"]["k"]
+    tp = shd._tp_axis(cfg, mesh)
+    if tp is not None and heads % n_model == 0:
+        assert k_spec[3] == "model"
+    else:
+        assert k_spec[3] is None
+    # non-KV buffers never take the model axis
+    assert all(
+        e != "model" for e in specs["blocks"]["pos0"]["attn"]["slot_pos"]
+    )
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n_data=st.integers(1, 8),
+    n_model=st.integers(1, 4),
+    use_tp=st.booleans(),
+    batch=st.integers(1, 48),
+    rank=st.integers(1, 4),
+    with_scalar=st.booleans(),
+)
+def test_batch_specs_valid_or_guarded(
+    n_data, n_model, use_tp, batch, rank, with_scalar
+):
+    mesh = _FakeMesh(data=n_data, model=n_model)
+    cfg = _Cfg(use_tp=use_tp)
+    tree = {"x": _sds(*([batch] + [3] * (rank - 1)))}
+    if with_scalar:
+        tree["s"] = _sds()
+    data_size = shd._axis_size(shd.data_axes(cfg, mesh), mesh)
+
+    specs = shd.batch_specs(tree, cfg, mesh)
+    _assert_valid(tree, specs, mesh)
+    # only the leading dim is ever sharded
+    assert all(e is None for e in specs["x"][1:])
+
+    ok = batch % data_size == 0 and not with_scalar
+    if data_size > 1 and not ok:
+        with pytest.raises(ShardingGuardError):
+            shd.batch_specs(tree, cfg, mesh, strict=True)
+    else:
+        strict = shd.batch_specs(tree, cfg, mesh, strict=True)
+        assert strict == specs
+        if data_size > 1:
+            assert shd.spec_shard_factor(strict["x"], mesh) == data_size
+
+
+def test_bytes_per_device_accounting_matches_hand_count():
+    mesh = _FakeMesh(data=4, model=2)
+    cfg = _Cfg()
+    tree = _cache_tree(2, 8, 16, 4, 8, 24)
+    specs = shd.cache_specs(tree, cfg, mesh, strict=True)
+    per_dev = shd.bytes_per_device(tree, specs, mesh)
+    # k/v: 2*8*16*4*8 f32 sharded 4-way (data) and 2-way (model heads)
+    kv = 2 * (2 * 8 * 16 * 4 * 8 * 4) // 8
+    # slot_pos: 2*8*16 f32 sharded 4-way
+    sp = (2 * 8 * 16 * 4) // 4
+    # tail h: 8*24 f32 4-way; conv: 8*3*24 f32 4-way
+    tail = (8 * 24 * 4) // 4 + (8 * 3 * 24 * 4) // 4
+    assert per_dev == kv + sp + tail
+    # replicated baseline is exactly the unsharded byte count
+    repl = jax.tree.map(
+        lambda s: P(*([None] * len(s))), specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+    assert shd.bytes_per_device(tree, repl, mesh) == sum(
+        l.size * 4 for l in jax.tree.leaves(tree)
+    )
+
+
+def test_guard_error_names_the_leaf():
+    mesh = _FakeMesh(data=4, model=1)
+    with pytest.raises(ShardingGuardError, match="blocks/pos0/attn/k"):
+        shd.cache_specs(
+            {"blocks": {"pos0": {"attn": {"k": _sds(1, 6, 4, 2, 8)}}}},
+            _Cfg(), mesh, strict=True,
+        )

@@ -511,6 +511,66 @@ def test_fleet_simulation_deterministic_no_drops(program):
         b["metrics"]["deadline_slack_s"]["violations"]
 
 
+def test_should_flush_fp_boundary_at_large_virtual_times():
+    """Regression: the flush predicate must hold at now == oldest +
+    max_wait even when fp cancellation rounds the recovered wait below
+    max_wait. At large virtual times the rounding error is an ulp of
+    the *magnitude* — adversarial bases make it dwarf the old fixed
+    1e-9 epsilon, which livelocked the event loop (time could not
+    advance past a trigger the predicate refused to fire on)."""
+    cfg = SchedulerConfig(buckets=(8,), max_wait_s=0.256)
+    for base in (0.0, 1.0, 2.0**30, 2.0**40, 1e15):
+        sched = MicroBatchScheduler(cfg, n_patients=1)
+        sched.enqueue(
+            SegmentRef(patient=0, seq=0, arrival_s=base,
+                       deadline_s=base + 2.048)
+        )
+        trigger = base + cfg.max_wait_s  # what the event loop advances to
+        assert sched.should_flush(trigger), (
+            base, trigger - base - cfg.max_wait_s
+        )
+        # and never fires meaningfully early: strictly before the
+        # trigger's fp neighborhood the predicate stays False
+        if base <= 2.0**30:
+            assert not sched.should_flush(base + cfg.max_wait_s * 0.5)
+
+
+def test_advance_virtual_time_forces_progress():
+    from repro.stream import advance_virtual_time
+
+    # normal advance: target wins
+    assert advance_virtual_time(1.0, 2.5) == 2.5
+    # fp-stalled advance: target rounds to now (service below one ulp)
+    big = 2.0**50
+    assert big + 1e-6 == big  # the adversarial premise
+    assert advance_virtual_time(big, big + 1e-6) > big
+    # equal-time trigger cannot stall either
+    assert advance_virtual_time(big, big) > big
+
+
+def test_fleet_simulation_survives_adversarial_virtual_times(program):
+    """End-to-end livelock regression: a fleet whose virtual clock sits
+    at adversarially large magnitudes (huge segment period pushing
+    arrivals to ~1e12 s, where one ulp exceeds the chip service time
+    and rivals max_wait rounding) must still terminate, pack every
+    segment exactly once, and keep completions finite and ordered."""
+    cfg = FleetConfig(
+        n_patients=6,
+        segments_per_patient=6,
+        buckets=(4, 16),
+        jitter_frac=0.3,  # adversarial jitter at huge period magnitudes
+        seed=3,
+        period_s=2.0**40,  # ~1.1e12 s: ulp ~2.4e-4 s >> 35 us service
+    )
+    out = simulate(cfg, program)
+    assert out["metrics"]["segments_total"] == 6 * 6
+    assert out["metrics"]["dropped_total"] == 0
+    assert out["metrics"]["diagnoses_total"] == 6
+    assert np.isfinite(out["metrics"]["virtual_horizon_s"])
+    # completions advanced past the last arrival: time really moved
+    assert out["metrics"]["virtual_horizon_s"] > 6 * cfg.period_s
+
+
 def test_fleet_simulation_with_dropout_counts_source_gaps(program):
     cfg = FleetConfig(
         n_patients=10,
