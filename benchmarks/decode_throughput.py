@@ -17,10 +17,20 @@ BENCH_stream.json pairs wall numbers with the modeled chip fleet:
     memory/bandwidth plan the paper's fixed-power datapath story maps
     onto.
 
+A third section measures *admission*: the engine seats requests by
+batched prefill + per-slot cache scatter (`serve.seating`), so the
+work per admitted request is O(prompt) — independent of the pool size.
+`admission_work` counts the (row x token) units the engine's prefill
+cells actually processed (`Engine.admission_rowsteps`) at two pool
+sizes and asserts they are identical; the counterfactual replay cost
+(the PR 3 path: every prompt token stepped through the whole pool,
+prompt x pool per request) is recorded alongside for the ratio.
+
 `--smoke` runs the acceptance cells (2 arch families x {1, 8-data,
 4x2-data-model} meshes on 8 forced host devices) and asserts: sharded
 per-device cache bytes < the replicated baseline, modeled tokens/s
-scaling with device count, and valid (guard-checked) placements.
+scaling with device count, valid (guard-checked) placements, and
+pool-size-independent admission cost.
 
     PYTHONPATH=src python benchmarks/decode_throughput.py [--smoke]
 """
@@ -45,6 +55,7 @@ import jax.numpy as jnp
 from repro import configs
 from repro.launch.mesh import make_serving_mesh, parse_mesh_spec
 from repro.models import api
+from repro.serve import engine as E
 from repro.serve import sharded as SH
 
 # Nominal HBM bandwidth of one modeled serving device (TPU-class twin).
@@ -123,6 +134,71 @@ def run_cell(
     }
 
 
+def _admission_cell(model, *, pool: int, n_requests: int,
+                    prompt_len: int, mesh_spec=None, params=None) -> dict:
+    """Admit `n_requests` into a `pool`-slot engine and report the
+    measured admission work (row x token units through prefill cells)."""
+    cfg = model.cfg
+    if mesh_spec is None:
+        eng = E.Engine(model, params, batch_size=pool)
+    else:
+        eng = SH.ShardedEngine(
+            model, params, batch_size=pool,
+            mesh=make_serving_mesh(mesh_spec),
+        )
+    reqs = [
+        E.Request(
+            uid=i,
+            prompt=jax.random.randint(
+                jax.random.PRNGKey(10 + i), (prompt_len,), 0, cfg.vocab
+            ),
+            max_new=3,
+        )
+        for i in range(n_requests)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_ticks=50)
+    assert all(r.done for r in reqs)
+    return {
+        "arch": cfg.name,
+        "mesh": mesh_spec or "1",
+        "pool": pool,
+        "n_requests": n_requests,
+        "prompt_len": prompt_len,
+        "admission_rowsteps": eng.admission_rowsteps,
+        "admission_prefills": eng.admission_prefills,
+        "admission_work_per_request": eng.admission_rowsteps
+        / n_requests,
+        # what replay admission (PR 3) would have spent: every prompt
+        # token stepped through the whole pool, per request
+        "replay_rowsteps_counterfactual": n_requests * prompt_len * pool,
+    }
+
+
+def measure_admission(arch: str, *, prompt_len: int) -> list:
+    """Admission-work cells at two pool sizes (plus the 8-device data
+    mesh when available): `admission_rowsteps` must not change with the
+    pool — seating is O(prompt), the replay counterfactual is
+    O(prompt x pool)."""
+    cfg = configs.reduced(arch)
+    model = api.build_model(cfg, tp=1, max_seq=prompt_len + 6)
+    params = model.init(jax.random.PRNGKey(0))
+    cells = [
+        _admission_cell(model, pool=pool, n_requests=4,
+                        prompt_len=prompt_len, params=params)
+        for pool in (4, 8)
+    ]
+    if jax.device_count() >= 8:
+        cells += [
+            _admission_cell(model, pool=pool, n_requests=4,
+                            prompt_len=prompt_len, mesh_spec="8",
+                            params=params)
+            for pool in (8, 16)
+        ]
+    return cells
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -189,12 +265,15 @@ def main() -> None:
             "wall_tokens_per_s_hi": hi["wall_tokens_per_s"],
         })
 
+    admission = measure_admission(ARCHS[0], prompt_len=args.prompt_len)
+
     rec = {
         "n_host_devices": jax.device_count(),
         "hbm_bw_bytes_per_s": HBM_BW_BYTES_PER_S,
         "reduced_configs": True,
         "cells": cells,
         "scaling": scaling,
+        "admission": admission,
     }
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=1)
@@ -218,6 +297,28 @@ def main() -> None:
             f"(cache/dev {s['cache_bytes_per_device_lo']} -> "
             f"{s['cache_bytes_per_device_hi']} B)"
         )
+    # admission is O(prompt): measured work identical across pool sizes
+    # (per mesh), and strictly below the replay counterfactual at the
+    # larger pools
+    by_mesh: dict = {}
+    for c in admission:
+        by_mesh.setdefault(c["mesh"], []).append(c)
+        print(
+            f"[decode_throughput] admission {c['arch']} mesh={c['mesh']} "
+            f"pool={c['pool']:3d}: {c['admission_rowsteps']} rowsteps "
+            f"({c['admission_work_per_request']:.0f}/req; replay would "
+            f"be {c['replay_rowsteps_counterfactual']})"
+        )
+    for mesh_cells in by_mesh.values():
+        works = {c["admission_rowsteps"] for c in mesh_cells}
+        assert len(works) == 1, (
+            f"admission work varies with pool size: {mesh_cells}"
+        )
+        big = max(mesh_cells, key=lambda c: c["pool"])
+        assert (
+            big["admission_rowsteps"]
+            < big["replay_rowsteps_counterfactual"]
+        ), big
 
 
 if __name__ == "__main__":

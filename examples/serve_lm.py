@@ -1,15 +1,22 @@
-"""Batched LM serving demo: slot-engine + weight-only quantized decode.
+"""Batched LM serving demo: batched-prefill admission + quantized decode.
 
     PYTHONPATH=src python examples/serve_lm.py --arch qwen3-8b
 
-Submits a burst of variable-length requests to the slot-based engine
-(continuous batching), then repeats with int8/int4 weight-only
-quantization — the paper's compressed-storage idea applied to the
-memory-bound decode regime — and reports the token agreement between
-precisions. On a multi-device host (or with
-XLA_FLAGS=--xla_force_host_platform_device_count=8) the same requests
-also run through the mesh-sharded engine (`repro.serve.sharded`) and
-the outputs are compared token-for-token.
+Submits a burst of variable-length requests to the slot engine in one
+call: admission groups them by prompt length, runs one batched
+`model.prefill` per group, and scatter-seats the resulting cache rows
+into the pool (`repro.serve.seating`) — O(prompt) work per request,
+independent of the pool size; the demo prints the measured admission
+work next to what pool-replay admission would have cost. Then repeats
+with int8/int4 weight-only quantization — the paper's
+compressed-storage idea applied to the memory-bound decode regime —
+and reports the token agreement between precisions. On a multi-device
+host (or with XLA_FLAGS=--xla_force_host_platform_device_count=8) the
+same burst also runs through the mesh-sharded engine
+(`repro.serve.sharded`) and the outputs are compared token-for-token.
+
+`--smoke` (CI: scripts/ci.sh) shrinks the burst and asserts the demo's
+claims instead of just printing them.
 """
 
 import argparse
@@ -23,26 +30,39 @@ from repro.serve import engine as E
 from repro.serve import sharded as SH
 
 
+def submit_burst(eng, reqs):
+    """Admit a whole burst in one call: submit everything, then tick —
+    the engine batches the admission prefills per prompt length."""
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-8b")
-    ap.add_argument("--requests", type=int, default=5)
-    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small burst + assertions (CI entry point)")
     args = ap.parse_args()
+    if args.smoke:
+        args.requests, args.slots, args.max_new = 4, 2, 4
 
     cfg = configs.reduced(args.arch)
     model = api.build_model(cfg, tp=1, max_seq=96)
     params = model.init(jax.random.PRNGKey(0))
 
     def make_requests():
-        # variable-length prompts; deterministic so the sharded engine
-        # below can replay the exact same burst for comparison
+        # pairwise-repeated lengths (4, 4, 7, 7, ...) so co-admitted
+        # requests share batched prefill cells; deterministic so the
+        # sharded engine below can replay the same burst for comparison
         return [
             E.Request(
                 uid=i,
                 prompt=jax.random.randint(
-                    jax.random.PRNGKey(i), (4 + (i % 4) * 3,), 0,
+                    jax.random.PRNGKey(i), (4 + (i // 2 % 2) * 3,), 0,
                     cfg.vocab,
                 ),
                 max_new=args.max_new,
@@ -50,16 +70,27 @@ def main() -> None:
             for i in range(args.requests)
         ]
 
-    # --- slot engine with more requests than slots ----------------------
+    # --- slot engine: one burst, batched admission ----------------------
     eng = E.Engine(model, params, batch_size=args.slots)
     reqs = make_requests()
-    for r in reqs:
-        eng.submit(r)
-    eng.run()
+    submit_burst(eng, reqs)
+    replay_cost = sum(r.prompt.shape[0] for r in reqs) * args.slots
     print(f"engine: {args.requests} requests over {args.slots} slots")
     for r in reqs:
         print(f"  req {r.uid} (prompt {r.prompt.shape[0]:2d} tok): "
               f"{r.output}")
+    print(
+        f"admission: {args.requests} requests seated through "
+        f"{eng.admission_prefills} batched prefill cells, "
+        f"{eng.admission_rowsteps} row-tokens of work "
+        f"(pool-replay admission would have spent {replay_cost})"
+    )
+    if args.smoke:
+        assert all(r.done for r in reqs)
+        # batched: fewer prefill cells than requests, less work than
+        # stepping every prompt token through the whole pool
+        assert eng.admission_prefills < args.requests
+        assert eng.admission_rowsteps < replay_cost
 
     # --- sharded engine on a data mesh (token-identical) ----------------
     n_dev = jax.device_count()
@@ -72,28 +103,44 @@ def main() -> None:
             model, params, batch_size=pool, mesh=make_smoke_mesh(n_dev, 1)
         )
         sreqs = make_requests()
-        for r in sreqs:
-            seng.submit(r)
-        seng.run()
+        submit_burst(seng, sreqs)
         same = all(a.output == b.output for a, b in zip(reqs, sreqs))
         plan = seng.plan
         print(
             f"sharded engine on {n_dev} devices: outputs "
             f"{'identical' if same else 'DIFFER'}; cache "
             f"{plan.cache_bytes_per_device} B/device vs "
-            f"{plan.cache_bytes_total} B replicated"
+            f"{plan.cache_bytes_total} B replicated; admission "
+            f"{seng.admission_rowsteps} row-tokens over "
+            f"{seng.admission_prefills} cells"
         )
+        if args.smoke:
+            assert all(r.done for r in sreqs)
+            assert same, "sharded burst diverged from single-device"
 
     # --- quantized serving comparison -----------------------------------
     prompts = jax.random.randint(jax.random.PRNGKey(42), (4, 12), 0,
                                  cfg.vocab)
     base = E.generate(model, params, prompts, max_new=args.max_new)
-    for bits in (8, 4):
+    for bits in (8, 4) if not args.smoke else (8,):
         qp = E.quantize_for_serving(params, bits)
         out = E.generate(model, qp, prompts, max_new=args.max_new)
         agree = float(jnp.mean((out == base).astype(jnp.float32)))
         print(f"int{bits} weight-only decode: token agreement vs bf16 "
               f"= {agree:.2f}")
+
+    # --- sampling: per-request folded keys ------------------------------
+    sampled = E.generate(
+        model, params, prompts, max_new=args.max_new, greedy=False,
+        key=jax.random.PRNGKey(7), temperature=0.8, top_k=20,
+    )
+    again = E.generate(
+        model, params, prompts, max_new=args.max_new, greedy=False,
+        key=jax.random.PRNGKey(7), temperature=0.8, top_k=20,
+    )
+    assert (jnp.asarray(sampled) == jnp.asarray(again)).all()
+    print(f"sampled (T=0.8, top-k=20, reproducible): "
+          f"{jnp.asarray(sampled)[0].tolist()}")
 
 
 if __name__ == "__main__":

@@ -1,16 +1,19 @@
 #!/usr/bin/env bash
 # Tier-1 CI: run the full suite on a forced 8-device host platform so
 # the sharding rules, shard_map collectives, and the multi-device tests
-# (tests/test_dist_multidevice.py, tests/test_decode_multidevice.py)
-# are exercised on a >1-device mesh (single-device hosts would silently
-# skip them). The `slow`-marked multi-device decode tests run here;
-# skip them locally with `pytest -m "not slow"`.
+# (tests/test_dist_multidevice.py, tests/test_decode_multidevice.py,
+# tests/test_admission_properties.py) are exercised on a >1-device mesh
+# (single-device hosts would silently skip them). The `slow`-marked
+# multi-device tests run here; every run ends with a per-file test-time
+# report (tests/conftest.py) so a new test file ballooning the suite is
+# visible immediately.
 #
-# Usage: scripts/ci.sh [--smoke] [pytest args...]
-# The benchmark smokes (stream + sharded decode) run in every CI
-# invocation — `--smoke` is accepted explicitly so the documented
-# `scripts/ci.sh --smoke` entry point names what it runs; any other
-# args pass through to pytest.
+# Usage: scripts/ci.sh [--smoke] [--fast] [pytest args...]
+#   --fast   fast lane: pytest -m "not slow" and no benchmark smokes —
+#            the local inner-loop entry point.
+#   --smoke  benchmark smokes below always run in full CI; flag kept so
+#            the documented `scripts/ci.sh --smoke` entry point names
+#            what it runs; any other args pass through to pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -20,22 +23,33 @@ cd "$(dirname "$0")/.."
 export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+FAST=0
 PYTEST_ARGS=()
 for a in "$@"; do
   case "$a" in
     --smoke) ;;  # benchmarks below always run; flag kept for the docs
+    --fast) FAST=1 ;;
     *) PYTEST_ARGS+=("$a") ;;
   esac
 done
 
+if [[ "$FAST" == 1 ]]; then
+  python -m pytest -x -q -m "not slow" ${PYTEST_ARGS+"${PYTEST_ARGS[@]}"}
+  exit 0
+fi
+
 python -m pytest -x -q ${PYTEST_ARGS+"${PYTEST_ARGS[@]}"}
 
-# Benchmark smokes on the same 8 forced host devices, so neither can
-# bit-rot:
+# Benchmark + example smokes on the same 8 forced host devices, so none
+# can bit-rot:
 #  * stream_throughput — tiny sweep + the 1000-patient real-time cell;
 #    asserts zero scheduler drops and >= real-time sustained throughput.
 #  * decode_throughput — sharded LM decode acceptance cells; asserts
-#    per-device cache bytes < replicated baseline and modeled tokens/s
-#    scaling with device count.
+#    per-device cache bytes < replicated baseline, modeled tokens/s
+#    scaling with device count, and pool-size-independent (O(prompt))
+#    batched-prefill admission cost.
+#  * serve_lm example — batched admission demo (multiple prompts seated
+#    per prefill cell) through the plain and mesh-sharded engines.
 python benchmarks/stream_throughput.py --smoke --out /tmp/BENCH_stream_ci.json
 python benchmarks/decode_throughput.py --smoke --out /tmp/BENCH_decode_ci.json
+python examples/serve_lm.py --smoke

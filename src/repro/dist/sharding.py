@@ -223,6 +223,16 @@ def batch_specs(tree: Any, cfg, mesh: Mesh, *, strict: bool = False) -> Any:
 _KV_LEAVES = ("k", "v", "k_scale", "v_scale", "cross_k", "cross_v")
 
 
+def cache_batch_axis(path_parts: Sequence[str]) -> int:
+    """Index of the pool-slot (batch) axis for one decode-cache leaf,
+    identified by its tree path: stacked subtrees ("blocks", "dec")
+    carry a leading layer-group axis before the batch axis. Shared by
+    `cache_specs` (which shards that axis over data) and
+    `serve.seating` (which scatters/gathers per-slot rows along it) so
+    the two can never disagree about where a slot lives."""
+    return 1 if path_parts and path_parts[0] in ("blocks", "dec") else 0
+
+
 def cache_specs(cache: Any, cfg, mesh: Mesh, *, strict: bool = False) -> Any:
     """Decode-cache rules: batch dim over the data axes; KV-head dim of
     attention buffers over the model axis. Stacked subtrees ("blocks",
@@ -244,7 +254,7 @@ def cache_specs(cache: Any, cfg, mesh: Mesh, *, strict: bool = False) -> Any:
     for kp, leaf in flat:
         parts = _path_str(kp).split("/")
         shape = getattr(leaf, "shape", ())
-        b_idx = 1 if parts and parts[0] in ("blocks", "dec") else 0
+        b_idx = cache_batch_axis(parts)
         entries: list[Any] = [None] * len(shape)
         if len(shape) > b_idx:
             if _dim_ok(shape[b_idx], axes, mesh):

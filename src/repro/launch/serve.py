@@ -1,8 +1,13 @@
 """Serving driver: batched generation (LM) or VA diagnosis service.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \\
-      --batch 4 --prompt-len 16 --max-new 16 [--quant-bits 8]
+      --batch 4 --prompt-len 16 --max-new 16 [--quant-bits 8] \\
+      [--temperature 0.8 --top-k 40]
   PYTHONPATH=src python -m repro.launch.serve --arch va-cnn --patients 8
+
+Greedy by default; --temperature enables per-request folded-key
+sampling (reproducible for a fixed --seed, optionally top-k-truncated)
+on both the single-device and mesh-sharded paths.
 
 Sharded multi-device decode (`repro.serve.sharded`): pass --mesh D or
 DxM to place the decode cache/params on a ("data", "model") mesh; on a
@@ -42,6 +47,18 @@ def serve_lm(args) -> None:
     prompts = jax.random.randint(
         key, (args.batch, args.prompt_len), 0, cfg.vocab
     )
+    sampling = dict(
+        greedy=args.temperature is None,
+        key=jax.random.fold_in(key, 1),  # decouple from init/prompts
+        # keep an explicit 0.0 (sample_tokens' documented degenerate-
+        # to-greedy case) instead of `or`-defaulting it to 1.0
+        temperature=1.0 if args.temperature is None
+        else args.temperature,
+        top_k=args.top_k,
+    )
+    if args.temperature is not None:
+        print(f"[serve] sampling: temperature={args.temperature} "
+              f"top_k={args.top_k or 'off'} (per-request folded keys)")
     if args.mesh:
         mesh = make_serving_mesh(args.mesh)
         plan = SH.plan_decode(model, params, mesh, batch_size=args.batch)
@@ -54,12 +71,14 @@ def serve_lm(args) -> None:
         t0 = time.monotonic()
         out = SH.sharded_generate(
             model, params, prompts, mesh=mesh, max_new=args.max_new,
-            plan=plan,
+            plan=plan, **sampling,
         )
         out.block_until_ready()
     else:
         t0 = time.monotonic()
-        out = E.generate(model, params, prompts, max_new=args.max_new)
+        out = E.generate(
+            model, params, prompts, max_new=args.max_new, **sampling
+        )
         out.block_until_ready()
     dt = time.monotonic() - t0
     n_tok = args.batch * args.max_new
@@ -99,12 +118,21 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--quant-bits", type=int, default=None)
+    ap.add_argument("--temperature", type=float, default=None,
+                    help="enable sampling at this temperature "
+                         "(default: greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation for sampling (0 = full "
+                         "distribution); needs --temperature")
     ap.add_argument("--mesh", default=None,
                     help="shard decode on a device mesh: 'D' or 'DxM' "
                          "(data x model), e.g. --mesh 8 or --mesh 4x2")
     ap.add_argument("--patients", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.top_k and args.temperature is None:
+        ap.error("--top-k only applies when sampling; pass "
+                 "--temperature too (e.g. --temperature 1.0)")
     if args.arch == "va-cnn":
         serve_va(args)
     else:

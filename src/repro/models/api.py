@@ -28,6 +28,25 @@ from repro.models import transformer as T
 from repro.models import whisper as W
 
 
+# block kinds whose decode cache advances on every step (hidden-state
+# recurrences), as opposed to position-indexed attention KV writes.
+# The serving engine seats both families by per-slot cache scatter
+# (`serve.seating`); the distinction still matters for anything that
+# relies on replaying a (token, pos) being idempotent — it is for
+# attention caches, never for these.
+RECURRENT_KINDS = ("rglru", "rwkv")
+
+
+def block_kinds(cfg: ArchConfig) -> tuple[str, ...]:
+    """Every block kind the stack instantiates (pattern + tail)."""
+    return tuple(cfg.pattern) + tuple(cfg.tail or ())
+
+
+def is_recurrent(cfg: ArchConfig) -> bool:
+    """True when any block carries a step-advancing recurrent cache."""
+    return any(k in RECURRENT_KINDS for k in block_kinds(cfg))
+
+
 @dataclasses.dataclass(frozen=True)
 class Model:
     cfg: ArchConfig

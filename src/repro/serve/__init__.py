@@ -1,8 +1,17 @@
-"""Serving substrate: batched LM engine (single-device + mesh-sharded)
-and the paper's VA diagnosis service."""
+"""Serving substrate: batched LM engine (single-device + mesh-sharded,
+batched prefill admission with per-slot cache scatter) and the paper's
+VA diagnosis service."""
 
-from repro.serve import engine, sharded, va_service
-from repro.serve.engine import Engine, Request, generate
+from repro.serve import engine, seating, sharded, va_service
+from repro.serve.engine import (
+    EncDecUnsupportedError,
+    Engine,
+    Request,
+    generate,
+    request_key,
+    sample_tokens,
+)
+from repro.serve.seating import gather_slots, scatter_slots
 from repro.serve.sharded import (
     DecodePlan,
     ShardedEngine,
@@ -13,11 +22,17 @@ from repro.serve.sharded import (
 
 __all__ = [
     "engine",
+    "seating",
     "sharded",
     "va_service",
+    "EncDecUnsupportedError",
     "Engine",
     "Request",
     "generate",
+    "request_key",
+    "sample_tokens",
+    "gather_slots",
+    "scatter_slots",
     "DecodePlan",
     "ShardedEngine",
     "compile_decode",

@@ -1,10 +1,24 @@
-"""Batched serving engine: prefill + slot-based continuous decode.
+"""Batched serving engine: batched prefill admission + slot decode.
 
 A fixed pool of `batch_size` decode slots runs one jitted `decode_step`
 per tick for the whole pool (decode is memory-bound: batching the pool
 amortizes the weight reads — exactly the roofline term the paper's
-compressed weights attack). Requests are admitted into free slots via
-per-request prefill; finished slots (EOS or max_tokens) are recycled.
+compressed weights attack). Admission runs the real batched
+`model.prefill` over the requests being seated (grouped by prompt
+length) and scatters the resulting per-request cache rows into the
+placed pool via `serve.seating` — O(prompt) work per request,
+independent of the pool size. Because seating overwrites a slot's
+entire cache row, it is exact for attention KV *and* step-advancing
+recurrent (rg-lru / rwkv) caches alike; finished slots (EOS or
+max_tokens) are recycled.
+
+Sampling: greedy argmax by default; with `greedy=False` every request
+draws through `sample_tokens` (temperature / top-k) under a per-request
+folded PRNG key — token t of request `uid` uses
+`fold_in(fold_in(key, uid), t)`, so streams are reproducible across
+runs and invariant to seat order and co-tenancy. `generate` follows the
+same schedule (row index as uid), making the two paths token-identical
+under sampling as well as greedy.
 
 Weight-only quantization (`quantize_for_serving`) converts dense params
 to the packed mixed-bit-width format; the model's `linear_apply`
@@ -21,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.models.api import Model
 from repro.models.layers import compile_linear_quant
+from repro.serve import seating
 
 # param-path leaf dirs that stay dense at serve time (numerically
 # sensitive or tiny): embeddings, router, norms, rwkv adapters
@@ -30,10 +45,25 @@ _QUANT_TARGETS = (
     "w_x", "w_out",
 )
 
-# block kinds whose decode cache advances on every step (hidden-state
-# recurrences): replaying a committed (token, pos) is NOT idempotent
-# for them, unlike position-indexed attention KV writes
-_RECURRENT_KINDS = ("rglru", "rwkv")
+
+class EncDecUnsupportedError(TypeError):
+    """An encoder-decoder (whisper-family) model hit a decoder-only
+    serving path. These models need a frames-aware prefill (the open
+    ROADMAP "Enc-dec prefill" item); until that lands, drive them
+    directly through `model.prefill(params, tokens, frames)` +
+    `model.decode_step` (see `tests/test_serve.py::
+    test_decode_matches_teacher_forced` for the pattern)."""
+
+
+def _reject_enc_dec(cfg, where: str) -> None:
+    if cfg.is_enc_dec:
+        raise EncDecUnsupportedError(
+            f"{where} drives the decoder-only path, but {cfg.name!r} is "
+            f"an encoder-decoder model: its prefill needs audio frames "
+            f"(frames-aware prefill is not wired yet — ROADMAP 'Enc-dec "
+            f"prefill'). Run it through model.prefill(params, tokens, "
+            f"frames) + model.decode_step directly instead."
+        )
 
 
 def quantize_for_serving(params: Any, bits: int = 8) -> Any:
@@ -51,6 +81,41 @@ def quantize_for_serving(params: Any, bits: int = 8) -> Any:
     return visit(params)
 
 
+def sample_tokens(
+    logits: jax.Array,  # (B, V) float
+    keys: jax.Array,  # (B, 2) uint32 — one PRNG key per row
+    *,
+    temperature: float = 1.0,
+    top_k: int = 0,
+) -> jax.Array:
+    """Per-row temperature / top-k sampling. Returns (B,) int32.
+
+    `top_k <= 0` or `top_k >= V` samples the full distribution. The
+    top-k mask keeps every logit >= the k-th largest, so ties at the
+    threshold are all eligible (deterministic given the key, never
+    index-order-dependent). `temperature <= 0` degenerates to greedy
+    argmax over the masked logits — identical to plain argmax, since
+    masking only removes non-argmax entries.
+    """
+    logits = logits.astype(jnp.float32)
+    v = logits.shape[-1]
+    if top_k and top_k < v:
+        thresh = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < thresh, -jnp.inf, logits)
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / float(temperature)
+    return jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+
+
+def request_key(base: jax.Array, uid: int) -> jax.Array:
+    """Per-request PRNG key: fold the request uid into the engine/run
+    key. Token t then folds t into this — the schedule both the engine
+    and `generate` follow, so sampled streams match across paths and
+    are invariant to seat order."""
+    return jax.random.fold_in(base, uid)
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -65,34 +130,34 @@ class Request:
 class Engine:
     """Slot-based batched decoder around a Model.
 
-    Array placement and decode compilation go through overridable hooks
+    Array placement and compilation go through overridable hooks
     (`_place_params` / `_place_cache` / `_place_batch` /
-    `_compile_decode`) so `serve.sharded.ShardedEngine` can pin every
-    pool array to a device mesh while inheriting the slot semantics —
-    admission, EOS-on-first-token, committed-(token,pos) replay —
-    unchanged."""
+    `_compile_decode` / `_admission_cell` / `_admission_rows`) so
+    `serve.sharded.ShardedEngine` can pin every pool array — and the
+    admission prefill/seating cells — to a device mesh while inheriting
+    the slot semantics (admission, EOS-on-first-token, recycling)
+    unchanged.
+
+    Admission is batched: each round takes up to |free slots| queued
+    requests, groups them by prompt length, runs one `model.prefill`
+    per group, and scatter-seats the resulting cache rows into the
+    pool (`serve.seating.scatter_slots`). Work is O(prompt) per
+    request, independent of pool size — `admission_rowsteps` counts
+    the (row x token) units actually spent, which
+    `benchmarks/decode_throughput.py` asserts pool-size-independent.
+    """
 
     def __init__(self, model: Model, params: Any, *, batch_size: int,
-                 greedy: bool = True):
-        kinds = tuple(model.cfg.pattern) + tuple(model.cfg.tail or ())
-        if batch_size > 1 and any(k in _RECURRENT_KINDS for k in kinds):
-            # co-admission prefill replays seated slots' committed
-            # (token, pos); recurrent hidden states advance on every
-            # step, so the replay would silently corrupt them. A
-            # 1-slot pool has no co-seated slots and stays correct;
-            # batched recurrent decode goes through `generate` /
-            # `sharded.sharded_generate` (no replay) until the engine
-            # seats via per-slot cache scatter (see ROADMAP).
-            raise ValueError(
-                f"slot engine with batch_size={batch_size} does not "
-                f"support recurrent-cache models ({model.cfg.name}: "
-                f"{kinds}); prefill replay is only idempotent for "
-                f"attention caches"
-            )
+                 greedy: bool = True, temperature: float = 1.0,
+                 top_k: int = 0, key: Optional[jax.Array] = None):
+        _reject_enc_dec(model.cfg, "the slot engine")
         self.model = model
         self.params = self._place_params(params)
         self.batch = batch_size
         self.greedy = greedy
+        self.temperature = temperature
+        self.top_k = top_k
+        self.key = key if key is not None else jax.random.PRNGKey(0)
         self._decode = self._compile_decode()
         self._queue: list[Request] = []
         self._slots: list[Optional[Request]] = [None] * batch_size
@@ -101,13 +166,26 @@ class Engine:
         self.pos = zi()
         self.tokens = zi()
         self.active = self._place_batch(jnp.zeros((batch_size,), bool))
-        # last (token, pos) actually written into each slot's cache.
-        # `tokens`/`pos` hold the *pending* decode input (the generated
-        # token not yet in the cache); prefill's pool-wide decode steps
-        # must re-feed other slots their committed state, not the
-        # pending one, or they would corrupt seated slots' caches.
+        # compatibility shim: last (token, pos) fed to each slot by the
+        # pool decode. `tokens`/`pos` hold the *pending* decode input;
+        # inactive slots re-feed their last-fed state each tick (an
+        # idempotent rewrite for attention caches, and harmless for
+        # recurrent ones — an unseated row's state is dead weight that
+        # scatter seating fully overwrites at the next admission).
         self._ctok = zi()
         self._cpos = zi()
+        # sampling state: per-slot folded request keys + #tokens already
+        # generated (the fold index for the slot's next draw)
+        self._slot_keys = self._place_batch(
+            jnp.zeros((batch_size, 2), jnp.uint32)
+        )
+        self._nout = zi()
+        # admission accounting: (rows x tokens) pushed through prefill
+        # cells, and how many cells ran — the O(prompt·pool) replay this
+        # machinery replaced would have counted batch_size x prompt per
+        # request here
+        self.admission_rowsteps = 0
+        self.admission_prefills = 0
 
     # -- placement / compilation hooks (identity on a single device) --------
 
@@ -123,51 +201,124 @@ class Engine:
     def _compile_decode(self) -> Callable:
         return jax.jit(self.model.decode_step)
 
+    def _admission_rows(self, n: int) -> int:
+        """Prefill-cell row count for `n` admitted prompts (sharded
+        engines pad to the mesh data-axis multiple; extra rows repeat
+        the last prompt and their outputs are discarded)."""
+        return n
+
+    def _admission_cell(self, rows: int):
+        """(prefill, seat, place_prompts) callables for one admission
+        batch width. The base engine shares two shape-polymorphic jits;
+        `ShardedEngine` compiles per-width cells with explicit mesh
+        shardings so the pool cache is seated without leaving its
+        placement."""
+        if not hasattr(self, "_prefill_jit"):
+            self._prefill_jit = jax.jit(self.model.prefill)
+            self._seat_jit = jax.jit(
+                seating.scatter_slots, donate_argnums=0
+            )
+        return self._prefill_jit, self._seat_jit, lambda p: p
+
+    # -- queue / admission --------------------------------------------------
+
     def submit(self, req: Request) -> None:
         if req.prompt.shape[0] == 0:
             # reject here: an empty prompt has no prefill logits to
             # derive the first token from (admission would crash deep
-            # in _admit with an opaque TypeError)
+            # in the prefill cell with an opaque shape error)
             raise ValueError(f"request {req.uid}: empty prompt")
         self._queue.append(req)
 
     def _admit(self) -> None:
-        for slot in range(self.batch):
-            # a request finishing at admission frees the slot for the
-            # next queued request on the same tick — keep admitting
-            while self._slots[slot] is None and self._queue:
-                req = self._queue.pop(0)
-                # per-request prefill: replay the prompt through the
-                # pool cache via decode steps (slot-local; simple and
-                # correct — a production engine would batch prefills)
-                tok = req.prompt
-                logits = None
-                for t in range(tok.shape[0]):
-                    logits = self._step_single(slot, int(tok[t]), t)
-                # the first generated token comes from the prefill's
-                # final logits — not from re-feeding the last prompt
-                # token (which would write it into the cache twice)
-                first = int(jnp.argmax(logits[slot]))
-                req.output.append(first)
-                if (
-                    req.eos is not None and first == req.eos
-                ) or len(req.output) >= req.max_new:
-                    # EOS-on-first-token guard: the request finishes at
-                    # admission and must never occupy the slot — seating
-                    # it would leak the slot for requests finishing on
-                    # the same tick they were admitted.
-                    req.done = True
-                    self.active = self.active.at[slot].set(False)
-                    continue
-                self._slots[slot] = req
-                self.pos = self.pos.at[slot].set(tok.shape[0] - 1)
-                self.tokens = self.tokens.at[slot].set(first)
-                self.active = self.active.at[slot].set(True)
-                break
+        # admission rounds: requests finishing at admission (EOS on
+        # their first token) never occupy a slot, so their freed seats
+        # go back into the next round on the same tick
+        while self._queue:
+            free = [i for i in range(self.batch) if self._slots[i] is None]
+            if not free:
+                return
+            take = self._queue[: len(free)]
+            del self._queue[: len(take)]
+            groups: dict[int, list] = {}
+            seats = iter(free)
+            for req in take:
+                groups.setdefault(int(req.prompt.shape[0]), []).append(
+                    (next(seats), req)
+                )
+            for s_len, pairs in groups.items():
+                self._admit_group(s_len, pairs)
+
+    def _admit_group(self, s_len: int, pairs: list) -> None:
+        """One batched prefill + scatter-seat for same-length prompts."""
+        reqs = [r for _, r in pairs]
+        n = len(reqs)
+        rows = self._admission_rows(n)
+        prompts = jnp.stack(
+            [jnp.asarray(r.prompt, jnp.int32) for r in reqs]
+        )
+        if rows > n:
+            prompts = jnp.concatenate(
+                [prompts,
+                 jnp.broadcast_to(prompts[-1:], (rows - n, s_len))]
+            )
+        prefill, seat, place = self._admission_cell(rows)
+        logits, cache_rows = prefill(self.params, place(prompts))
+        self.admission_rowsteps += rows * s_len
+        self.admission_prefills += 1
+        # the first generated token comes from the prefill's final
+        # logits — the same source `generate` uses, which is what makes
+        # the two paths token-identical
+        if self.greedy:
+            firsts = jnp.argmax(logits[:n], axis=-1).astype(jnp.int32)
+        else:
+            keys = jnp.stack(
+                [request_key(self.key, r.uid) for r in reqs]
+            )
+            firsts = sample_tokens(
+                logits[:n], jax.vmap(jax.random.fold_in)(
+                    keys, jnp.zeros((n,), jnp.int32)
+                ),
+                temperature=self.temperature, top_k=self.top_k,
+            )
+        src, dst = [], []
+        for j, (slot, req) in enumerate(pairs):
+            first = int(firsts[j])
+            req.output.append(first)
+            if (
+                req.eos is not None and first == req.eos
+            ) or len(req.output) >= req.max_new:
+                # EOS-on-first-token guard: the request finishes at
+                # admission and must never occupy the slot — seating it
+                # would leak the slot for requests finishing on the same
+                # tick they were admitted.
+                req.done = True
+                self.active = self.active.at[slot].set(False)
+                continue
+            src.append(j)
+            dst.append(slot)
+            self._slots[slot] = req
+            self.pos = self.pos.at[slot].set(s_len - 1)
+            self.tokens = self.tokens.at[slot].set(first)
+            self.active = self.active.at[slot].set(True)
+            self._ctok = self._ctok.at[slot].set(int(req.prompt[-1]))
+            self._cpos = self._cpos.at[slot].set(s_len - 1)
+            self._slot_keys = self._slot_keys.at[slot].set(
+                request_key(self.key, req.uid)
+            )
+            self._nout = self._nout.at[slot].set(1)
+        if src:
+            self.cache = seat(
+                self.cache, cache_rows,
+                jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32),
+            )
 
     def _step_single(self, slot: int, token: int, pos: int) -> jax.Array:
-        # other slots replay their committed (token, pos) — an
-        # idempotent cache rewrite — while `slot` advances
+        """Compatibility shim (the PR 2/3 replay admission ran prompts
+        through this): feed one slot (token, pos) while every other
+        slot re-feeds its last-fed state. Retransmitting a slot's
+        last-fed (token, pos) is a bitwise no-op for attention caches —
+        k/v writes depend only on (token, pos), not on cache contents."""
         self._ctok = self._ctok.at[slot].set(token)
         self._cpos = self._cpos.at[slot].set(pos)
         logits, self.cache = self._decode(
@@ -181,18 +332,32 @@ class Engine:
         if not any(r is not None for r in self._slots):
             return 0
         # active slots advance with their pending token; inactive slots
-        # idempotently replay their committed state (no junk writes)
+        # re-feed their last-fed state (no junk writes into positions a
+        # future tenant's scatter-seat wouldn't overwrite anyway)
         pos = jnp.where(self.active, self.pos + 1, self._cpos)
         toks = jnp.where(self.active, self.tokens, self._ctok)
         logits, self.cache = self._decode(
             self.params, self.cache, toks, pos
         )
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        # this decode committed (toks, pos) into every slot's cache
+        if self.greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            step_keys = jax.vmap(jax.random.fold_in)(
+                self._slot_keys, self._nout
+            )
+            nxt = sample_tokens(
+                logits, step_keys,
+                temperature=self.temperature, top_k=self.top_k,
+            )
+        # this decode fed (toks, pos) into every slot's cache
         self._ctok = toks
         self._cpos = pos
         self.pos = jnp.where(self.active, pos, self.pos)
         self.tokens = jnp.where(self.active, nxt, self.tokens)
+        # every occupied (== active, see test_serve_properties) slot
+        # produced one token this tick: one vectorized bump, not a
+        # per-slot dispatch on the per-token hot loop
+        self._nout = self._nout + self.active.astype(jnp.int32)
         n_active = 0
         for slot, req in enumerate(self._slots):
             if req is None:
@@ -223,23 +388,39 @@ def generate(
     max_new: int,
     greedy: bool = True,
     key: Optional[jax.Array] = None,
+    temperature: float = 1.0,
+    top_k: int = 0,
 ) -> jax.Array:
     """Simple batched generate: one prefill + max_new decode steps.
-    Returns (B, max_new) int32."""
+    Returns (B, max_new) int32.
+
+    With `greedy=False` and a `key`, row b's token t is drawn with
+    `fold_in(fold_in(key, b), t)` — the engine's per-request schedule
+    with the row index as uid, so a request submitted to an `Engine`
+    built on the same key (uid == row) produces the same stream."""
     b, s = prompts.shape
-    if model.cfg.is_enc_dec:
-        raise ValueError("use generate_encdec for enc-dec models")
+    _reject_enc_dec(model.cfg, "generate")
+    sampling = not greedy and key is not None
     last_logits, cache = jax.jit(model.prefill)(params, prompts)
     decode = jax.jit(model.decode_step)
+    if sampling:
+        row_keys = jax.vmap(lambda r: request_key(key, r))(jnp.arange(b))
+        draw = lambda lg, t: sample_tokens(
+            lg, jax.vmap(jax.random.fold_in)(
+                row_keys, jnp.full((b,), t, jnp.int32)
+            ),
+            temperature=temperature, top_k=top_k,
+        )
+        tok = draw(last_logits, 0)
+    else:
+        tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
     outs = []
-    tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
     for t in range(max_new):
         outs.append(tok)
         pos = jnp.full((b,), s + t, jnp.int32)
         logits, cache = decode(params, cache, tok, pos)
-        if greedy or key is None:
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if sampling:
+            tok = draw(logits, t + 1)
         else:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits).astype(jnp.int32)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return jnp.stack(outs, axis=1)

@@ -1,0 +1,93 @@
+"""Per-slot decode-cache seating: scatter/gather pool rows as pytrees.
+
+Batched prefill admission produces a cache whose batch dimension holds
+the *admitted* requests (a handful of rows); the engine's persistent
+pool cache holds `batch_size` slots. Seating is the move between the
+two: `scatter_slots` writes admitted rows into their destination slots,
+`gather_slots` reads slot rows back out (migration, debugging, tests).
+
+Both are pure jittable pytree functions. The slot axis of each leaf is
+derived from its tree path via `dist.sharding.cache_batch_axis` — the
+same rule `cache_specs` uses to shard that axis over the mesh data
+axes — so seating and placement can never disagree about where a slot
+lives. Writes go through `jax.lax.dynamic_update_slice` (one update per
+seated row, traced start indices): a single compiled cell serves every
+(row, slot) assignment of a given shape, XLA updates donated pool
+buffers in place, and under jit with explicit in/out shardings
+(`ShardedEngine._admission_cell`) the pool never leaves its mesh
+placement — seating is O(seated rows), not O(pool).
+
+Engines compile these with `jax.jit(..., donate_argnums=0)`; the module
+-level functions stay undonated so tests can reuse their inputs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import sharding as shd
+
+
+def _leaf_paths(tree: Any) -> list[tuple[list[str], Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(shd._path_str(kp).split("/"), leaf) for kp, leaf in flat]
+
+
+def slot_axes(tree: Any) -> list[int]:
+    """Slot-axis index for every leaf of a cache pytree, in flatten
+    order (parallel to `jax.tree.leaves(tree)`)."""
+    return [shd.cache_batch_axis(parts) for parts, _ in _leaf_paths(tree)]
+
+
+def scatter_slots(
+    pool: Any, rows: Any, src: jax.Array, dst: jax.Array
+) -> Any:
+    """Seat `rows` into `pool`: for every j, slot row `src[j]` of each
+    `rows` leaf overwrites slot row `dst[j]` of the matching `pool`
+    leaf (along that leaf's slot axis). Every other slot — and every
+    non-slot dimension — is untouched, so seating one request can never
+    disturb a co-seated tenant.
+
+    `rows` must mirror `pool`'s tree structure with the same per-leaf
+    shapes except the slot axis (typically the admitted-batch size);
+    `src`/`dst` are (K,) int32 index arrays (K static, values traced).
+    Returns the updated pool pytree.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(pool)
+    row_leaves = jax.tree.leaves(rows)
+    if len(flat) != len(row_leaves):
+        raise ValueError(
+            f"pool has {len(flat)} leaves but rows {len(row_leaves)} — "
+            f"seating needs structurally matching cache pytrees"
+        )
+    out = []
+    for (kp, pl), rl in zip(flat, row_leaves):
+        ax = shd.cache_batch_axis(shd._path_str(kp).split("/"))
+        for j in range(src.shape[0]):
+            sl = jax.lax.dynamic_slice_in_dim(rl, src[j], 1, axis=ax)
+            start = [0] * pl.ndim
+            start[ax] = dst[j]
+            pl = jax.lax.dynamic_update_slice(
+                pl, sl.astype(pl.dtype), tuple(start)
+            )
+        out.append(pl)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def gather_slots(pool: Any, slots: jax.Array) -> Any:
+    """Read slot rows back out: returns a pytree mirroring `pool` whose
+    slot axis holds `pool`'s rows `slots[0..K-1]`, in order — the exact
+    inverse of `scatter_slots(pool, rows, arange(K), slots)`."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(pool)
+    out = []
+    for kp, pl in flat:
+        ax = shd.cache_batch_axis(shd._path_str(kp).split("/"))
+        picks = [
+            jax.lax.dynamic_slice_in_dim(pl, slots[j], 1, axis=ax)
+            for j in range(slots.shape[0])
+        ]
+        out.append(jnp.concatenate(picks, axis=ax))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -23,11 +23,16 @@ Layers:
                         for one (model, mesh, pool size), no allocation;
   * `compile_decode`  — jitted prefill/decode with explicit shardings;
   * `sharded_generate`— batched generate (one prefill + N decode steps),
-                        the multi-device twin of `engine.generate`;
+                        the multi-device twin of `engine.generate`,
+                        greedy or sampled under per-row folded keys;
   * `ShardedEngine`   — `engine.Engine` with every pool array pinned to
-                        the mesh; slot admission, EOS-on-first-token and
-                        committed-(token,pos) idempotent prefill replay
-                        are inherited, not reimplemented.
+                        the mesh; slot admission (batched prefill +
+                        scatter seating), EOS-on-first-token recycling
+                        and per-request sampling keys are inherited, not
+                        reimplemented — this class only compiles the
+                        admission prefill/seat cells per admission width
+                        with explicit shardings, so seating updates the
+                        pool cache without it ever leaving the mesh.
 
 On a data-only mesh the sharded pool is token-for-token identical to
 the single-device engine (each device runs whole rows, same reduction
@@ -49,7 +54,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.dist import sharding as shd
 from repro.models.api import Model
-from repro.serve.engine import Engine
+from repro.serve import seating
+from repro.serve.engine import (
+    Engine,
+    _reject_enc_dec,
+    request_key,
+    sample_tokens,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,11 +160,7 @@ def compile_decode(
     shardings from `plan`. The cache argument/result keeps the
     `cache_specs` placement across every step, so decode never migrates
     the pool's persistent state."""
-    if model.cfg.is_enc_dec:
-        raise ValueError(
-            "sharded decode drives the decoder-only path; enc-dec "
-            "models need a frames-aware prefill (not wired yet)"
-        )
+    _reject_enc_dec(model.cfg, "sharded decode (compile_decode)")
     prefill = jax.jit(
         model.prefill,
         in_shardings=(plan.params, plan.prompts),
@@ -180,9 +187,19 @@ def sharded_generate(
     max_new: int,
     params_placed: bool = False,
     plan: Optional[DecodePlan] = None,
+    greedy: bool = True,
+    key: Optional[jax.Array] = None,
+    temperature: float = 1.0,
+    top_k: int = 0,
 ) -> jax.Array:
     """Multi-device `engine.generate`: one sharded prefill + `max_new`
-    sharded greedy decode steps. Returns (B, max_new) int32."""
+    sharded decode steps. Returns (B, max_new) int32.
+
+    Greedy by default; with `greedy=False` and a `key`, row b's token t
+    is drawn with `fold_in(fold_in(key, b), t)` — `engine.generate`'s
+    schedule, so the two paths stay stream-identical wherever their
+    logits do (data-only meshes; a model axis psums partial products,
+    which can flip samples only to fp tolerance)."""
     b, s = prompts.shape
     if plan is None:
         plan = plan_decode(model, params, mesh, batch_size=b)
@@ -194,9 +211,20 @@ def sharded_generate(
     prompts = jax.device_put(
         jnp.asarray(prompts, jnp.int32), plan.prompts
     )
+    sampling = not greedy and key is not None
+    if sampling:
+        row_keys = jax.vmap(lambda r: request_key(key, r))(jnp.arange(b))
+        draw = lambda lg, t: sample_tokens(
+            lg, jax.vmap(jax.random.fold_in)(
+                row_keys, jnp.full((b,), t, jnp.int32)
+            ),
+            temperature=temperature, top_k=top_k,
+        )
     last_logits, cache = prefill(params, prompts)
     outs = []
-    tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    tok = draw(last_logits, 0) if sampling else jnp.argmax(
+        last_logits, axis=-1
+    ).astype(jnp.int32)
     for t in range(max_new):
         outs.append(tok)
         pos = jax.device_put(
@@ -205,34 +233,46 @@ def sharded_generate(
         logits, cache = decode(
             params, cache, jax.device_put(tok, plan.token), pos
         )
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tok = draw(logits, t + 1) if sampling else jnp.argmax(
+            logits, axis=-1
+        ).astype(jnp.int32)
     return jnp.stack(outs, axis=1)
 
 
 class ShardedEngine(Engine):
-    """The PR 2 slot engine with its pool pinned to a mesh.
+    """The slot engine with its pool pinned to a mesh.
 
-    Everything behavioral — queue admission, per-request prefill replay
-    through pool-wide decode steps, EOS-on-first-token slot recycling,
-    committed-(token,pos) idempotent rewrites for seated slots — is
+    Everything behavioral — batched prefill admission, scatter seating,
+    EOS-on-first-token slot recycling, per-request sampling keys — is
     inherited from `Engine`; this class only overrides *where arrays
-    live*: params/cache/slot-state are device_put to the plan's
-    shardings at init, and the jitted decode carries explicit in/out
-    shardings so the cache round-trips without migrating. Host-side
-    `.at[].set` slot updates preserve the committed sharding; the step
-    wrapper re-pins token/pos anyway (jit with explicit in_shardings
-    rejects, rather than reshards, mismatched committed arrays)."""
+    live and how cells compile*: params/cache/slot-state are device_put
+    to the plan's shardings at init, the jitted decode carries explicit
+    in/out shardings so the cache round-trips without migrating, and
+    each admission width gets a (prefill, seat) cell pair compiled with
+    explicit shardings — the prefill cell's cache rows come out in the
+    admission-plan placement and `seating.scatter_slots` writes them
+    into the pool under `out_shardings=plan.cache`, so seating never
+    unshards the pool. Admission widths are padded to the mesh data-axis
+    multiple (`_admission_rows`); pad rows repeat a real prompt and
+    their outputs are discarded. Host-side `.at[].set` slot updates
+    preserve the committed sharding; the step wrapper re-pins token/pos
+    anyway (jit with explicit in_shardings rejects, rather than
+    reshards, mismatched committed arrays)."""
 
     def __init__(self, model: Model, params: Any, *, batch_size: int,
-                 mesh: Mesh, greedy: bool = True,
-                 strict: bool = True):
+                 mesh: Mesh, greedy: bool = True, strict: bool = True,
+                 temperature: float = 1.0, top_k: int = 0,
+                 key: Optional[jax.Array] = None):
         # the plan must exist before Engine.__init__ runs the hooks
         self.mesh = mesh
+        self._strict = strict
         self.plan = plan_decode(
             model, params, mesh, batch_size=batch_size, strict=strict
         )
+        self._adm_cells: dict[int, tuple] = {}
         super().__init__(
-            model, params, batch_size=batch_size, greedy=greedy
+            model, params, batch_size=batch_size, greedy=greedy,
+            temperature=temperature, top_k=top_k, key=key,
         )
 
     def _place_params(self, params: Any) -> Any:
@@ -256,6 +296,36 @@ class ShardedEngine(Engine):
             )
 
         return step
+
+    def _admission_rows(self, n: int) -> int:
+        # the admission prefill is itself a sharded cell: its batch dim
+        # must divide over the mesh data axes (strict guard), so pad up
+        return n + (-n) % max(self.plan.n_data, 1)
+
+    def _admission_cell(self, rows: int):
+        cell = self._adm_cells.get(rows)
+        if cell is None:
+            rplan = plan_decode(
+                self.model, self.params, self.mesh, batch_size=rows,
+                strict=self._strict,
+            )
+            prefill = jax.jit(
+                self.model.prefill,
+                in_shardings=(self.plan.params, rplan.prompts),
+                out_shardings=(rplan.logits, rplan.cache),
+            )
+            seat = jax.jit(
+                seating.scatter_slots,
+                in_shardings=(self.plan.cache, rplan.cache, None, None),
+                out_shardings=self.plan.cache,
+                donate_argnums=0,
+            )
+            place = lambda p: jax.device_put(
+                jnp.asarray(p, jnp.int32), rplan.prompts
+            )
+            cell = (prefill, seat, place)
+            self._adm_cells[rows] = cell
+        return cell
 
     @property
     def n_devices(self) -> int:

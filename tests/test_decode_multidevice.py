@@ -96,9 +96,9 @@ def _requests(cfg, n, max_new=5):
 
 
 def test_sharded_engine_matches_single_device_engine(built):
-    """Slot admission, recycling, and co-admission replay produce the
-    same per-request outputs on the 8-device mesh as on one device —
-    including the 3-requests-into-2-slots recycling path."""
+    """Slot admission (batched prefill + scatter seating) and recycling
+    produce the same per-request outputs on the 8-device mesh as on one
+    device — including the 3-requests-into-2-slots recycling path."""
     model, params, _ = built["qwen3_8b"]
     cfg = model.cfg
 
@@ -110,7 +110,7 @@ def test_sharded_engine_matches_single_device_engine(built):
     mesh = make_smoke_mesh(8, 1)
     shard = SH.ShardedEngine(model, params, batch_size=8, mesh=mesh)
     # pool width differs (8 slots vs 2) but greedy outputs must not:
-    # decode is per-slot and idle slots replay committed state
+    # decode is per-slot and idle slots re-feed their last-fed state
     for r in (reqs_shard := _requests(cfg, 3)):
         shard.submit(r)
     shard.run(max_ticks=50)

@@ -2,14 +2,17 @@
 
 Random interleavings of submit / tick (hypothesis; deterministic stub
 in CI) must never exceed slot capacity, never starve an admitted
-request, and keep the committed-(token,pos) replay contract: re-feeding
-the pool its committed state is a bitwise no-op on the cache. These are
+request, and keep the last-fed-(token,pos) shim contract: re-feeding
+the pool the state its last decode fed it is a bitwise no-op on
+attention caches (k/v writes depend only on (token, pos)). These are
 the invariants `serve.sharded.ShardedEngine` inherits wholesale, so
 they are pinned here once, on the cheap single-device engine.
 
-The replay no-op holds for attention caches (position-indexed writes
-are idempotent); recurrent caches advance state on every step and are
-exercised via the generate path instead (`test_decode_multidevice`).
+Admission itself is batched prefill + per-slot cache scatter
+(`serve.seating`), which overwrites a seated slot's entire cache row —
+so recurrent-cache models are first-class engine tenants at any batch
+size; their token-for-token equivalence with `generate` is pinned in
+`tests/test_admission_properties.py`.
 """
 
 import jax
@@ -103,9 +106,13 @@ def test_random_interleavings_keep_slot_invariants(
 @settings(max_examples=4, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_committed_replay_is_bitwise_noop_on_cache(built, seed):
-    """After any admission state, decoding the pool with its committed
-    (token, pos) — exactly what co-admission prefill does to seated
-    slots — must leave every cache leaf bit-identical."""
+    """After any ticked state, decoding the pool with its last-fed
+    (token, pos) — the retransmission shim — must leave every cache
+    leaf bit-identical: attention k/v writes depend only on (token,
+    pos), never on cache contents."""
+    # precondition of the whole replay contract: this only holds for
+    # attention caches (recurrent states advance on every step)
+    assert not api.is_recurrent(CFG)
     model, params, FastEngine = built
     rng = np.random.default_rng(seed)
     eng = FastEngine(model, params, batch_size=2)
@@ -129,33 +136,49 @@ def test_committed_replay_is_bitwise_noop_on_cache(built, seed):
         np.testing.assert_array_equal(a, b)
 
 
-def test_engine_rejects_batched_recurrent_models():
-    """Recurrent caches advance on every step, so co-admission replay
-    would silently corrupt seated slots: the slot engine must refuse
-    them at batch_size > 1 (single-slot pools have no co-seated slots
-    and stay legal; batched decode goes through `generate`)."""
+def test_engine_accepts_batched_recurrent_models():
+    """Scatter seating overwrites a seated slot's whole cache row, so
+    recurrent-cache models (whose hidden state advances every step and
+    made pool-replay admission unsound) now decode through the slot
+    engine at batch_size > 1 — the PR 3 guard is lifted. Full
+    token-for-token equivalence with `generate` is pinned in
+    tests/test_admission_properties.py; here: admission, recycling and
+    completion all work on a 2-slot recurrent pool."""
     cfg = configs.reduced("recurrentgemma_2b")
     model = api.build_model(cfg, tp=1, max_seq=32)
     params = model.init(jax.random.PRNGKey(0))
-    with pytest.raises(ValueError, match="recurrent"):
-        E.Engine(model, params, batch_size=2)
-    eng = E.Engine(model, params, batch_size=1)  # 1-slot pool is fine
-    assert eng.batch == 1
+    eng = E.Engine(model, params, batch_size=2)
+    reqs = [
+        E.Request(
+            uid=i,
+            prompt=jax.random.randint(
+                jax.random.PRNGKey(i), (4,), 0, cfg.vocab
+            ),
+            max_new=3,
+        )
+        for i in range(3)  # 3 requests over 2 slots forces recycling
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_ticks=30)
+    for r in reqs:
+        assert r.done and len(r.output) == 3
+    assert eng.admission_prefills >= 2  # co-admission + recycled seat
 
 
-def test_replaying_whole_prefill_is_idempotent(built):
-    """Replaying an entire committed prompt through `_step_single` (the
-    retransmission path: same tokens, same positions) leaves the cache
+def test_replaying_last_fed_state_is_idempotent(built):
+    """Re-feeding a slot its last-fed (token, pos) through
+    `_step_single` (the retransmission shim) leaves the cache
     bit-identical and does not disturb the slot's pending state."""
     model, params, FastEngine = built
     eng = FastEngine(model, params, batch_size=2)
     prompt = jax.random.randint(jax.random.PRNGKey(7), (5,), 0, CFG.vocab)
     req = E.Request(uid=0, prompt=prompt, max_new=8)
     eng.submit(req)
-    eng.tick()  # admit (prefill) + first pool tick
+    eng.tick()  # admit (batched prefill + seat) + first pool tick
     before_cache = jax.tree.map(np.asarray, eng.cache)
     pending = (int(eng.tokens[0]), int(eng.pos[0]))
-    # replay the committed prompt positions for slot 0
+    # retransmit slot 0's last-fed decode input
     slot_tok = int(eng._ctok[0])
     slot_pos = int(eng._cpos[0])
     eng._step_single(0, slot_tok, slot_pos)
