@@ -17,6 +17,15 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# Tree hygiene: compiled bytecode must never be committed (a PR once
+# landed 12 __pycache__/*.pyc files; .gitignore plus this guard keeps
+# the tree clean even if the ignore file regresses).
+if [[ -n "$(git ls-files '*.pyc' '*.pyo' 2>/dev/null)" ]]; then
+  echo "ERROR: committed bytecode files:" >&2
+  git ls-files '*.pyc' '*.pyo' >&2
+  exit 1
+fi
+
 # our flag goes LAST: XLA takes the last duplicate, so a pre-set
 # device-count in the caller's environment cannot silently shrink the
 # mesh and skip the multidevice tests
@@ -48,8 +57,13 @@ python -m pytest -x -q ${PYTEST_ARGS+"${PYTEST_ARGS[@]}"}
 #    per-device cache bytes < replicated baseline, modeled tokens/s
 #    scaling with device count, and pool-size-independent (O(prompt))
 #    batched-prefill admission cost.
+#  * dist_compression — scheme x pod-count reduction sweep; asserts the
+#    two-stage per-device egress is pod-count-independent (~4x below
+#    the f32 ring at n = 2/4/8), the gather scheme decays like 8/n,
+#    and the compressed loss curves track the f32 baseline.
 #  * serve_lm example — batched admission demo (multiple prompts seated
 #    per prefill cell) through the plain and mesh-sharded engines.
 python benchmarks/stream_throughput.py --smoke --out /tmp/BENCH_stream_ci.json
 python benchmarks/decode_throughput.py --smoke --out /tmp/BENCH_decode_ci.json
+python benchmarks/dist_compression.py --smoke --out /tmp/BENCH_dist_ci.json
 python examples/serve_lm.py --smoke

@@ -14,19 +14,39 @@ cross-pod data-center network — is int8 gradient all-reduce:
     all-gathers int8 values + f32 scalar scales and dequantize-averages
     locally.
 
+Two schemes, selectable via `trainer.make_dp_step_compressed(...,
+scheme=...)`:
+
+  * `compressed_psum_mean` ("gather") — every device all-gathers the
+    full int8 leaf from every peer and dequantize-averages locally.
+    One error buffer per leaf.
+  * `two_stage_psum_mean` ("two_stage") — quantized reduce-scatter +
+    all-gather: stage 1 all-to-alls int8 chunks so device d owns shard
+    d of the dequantized mean; stage 2 re-quantizes the owned shard
+    and all-gathers it back. Error feedback at BOTH quantization
+    points (err1 full-leaf, err2 shard-sized), each stage telescoping,
+    so the composition is lossless over time like the one-stage scheme.
+
 Wire accounting, honestly: a ring all-reduce of f32 costs each device
-~2·(n-1)/n·4·|leaf| bytes of egress; all-gathering a full int8 leaf
-per device costs (n-1)·|leaf| — a (8/n)x reduction. The production
-mesh (`launch/mesh.py`) has n=2 pods, where that is a genuine 4x;
-beyond n=8 the gather scheme loses and the right move is a quantized
-all-to-all reduce-scatter + all-gather (n-independent ~4x; ROADMAP
-open item). `benchmarks/dist_compression.py` reports both the
-HLO-accounted collective bytes and this modeled per-device egress.
+~2·(n-1)/n·4·|leaf| bytes of egress. The gather scheme costs
+(n-1)·|leaf| int8 — a (8/n)x reduction over f32: a genuine 4x at the
+production 2-pod mesh (`launch/mesh.py`), break-even at n=8, a LOSS
+beyond. The two-stage scheme costs ~2·(n-1)/n·|leaf| int8
+(all-to-all + all-gather of 1/n-sized shards) — ~4x below the f32
+ring at ANY pod count. Scheme crossover guidance: n < 8 pods -> use
+"gather" (fewer collectives, one quantization error instead of two);
+n >= 8 -> use "two_stage" (the gather scheme's egress win has decayed
+to <= 1x while two-stage holds ~4x). `benchmarks/dist_compression.py`
+sweeps scheme x pod count and reports both the HLO-accounted
+collective bytes and this modeled per-device egress.
 
 Non-finite gradients (loss-spike inf/NaN) are zeroed before
 quantization so they can neither corrupt the wire values nor lodge in
 the persistent error buffer — a poisoned residual would otherwise
-re-enter every later step, unlike the stateless uncompressed path.
+re-enter every later step. `uncompressed_psum_mean` applies the same
+finite-guard by default so `compress=False` is a fair ablation
+baseline (same failure semantics, only the wire format differs);
+pass `finite_guard=False` for raw IEEE propagation.
 
 In-pod axes keep XLA's native bf16/f32 collectives (ICI is not the
 bottleneck); only the `pod` axis routes through here — see
@@ -116,6 +136,99 @@ def compressed_psum_mean(
     return _tree_zip_map(one, grads, err)
 
 
-def uncompressed_psum_mean(grads: Any, axis: str) -> Any:
-    """Baseline: plain f32 pmean over `axis` (inside shard_map)."""
-    return jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
+def two_stage_psum_mean(
+    grads: Any, err1: Any, err2: Any, axis: str
+) -> tuple[Any, Any, Any]:
+    """Mean of `grads` over mesh axis `axis` via quantized
+    reduce-scatter + all-gather with two-stage error feedback. Call
+    inside shard_map. Returns (mean_grads, new_err1, new_err2).
+
+    Stage 1 (reduce-scatter): quantize (g + err1) per leaf, split the
+    int8 codes into n chunks and all-to-all them, so device d receives
+    chunk d from every peer; dequantize with the all-gathered per-peer
+    scales and average -> device d owns shard d of the mean. err1 is
+    the full-leaf quantization residual.
+
+    Stage 2 (all-gather): quantize (owned shard + err2), all-gather the
+    int8 shards + scales, dequantize into the full mean. err2 is the
+    shard-sized residual: leaf shape (ceil(|leaf|/n),), carried
+    per-device.
+
+    Both stages telescope, so over steps (zero-initialized buffers):
+
+        sum_t(returned mean) + pmean(err1_T, axis) + assembled(err2_T)
+            == sum_t(true f32 mean)
+
+    where assembled(err2) concatenates the per-device shards in axis
+    order (exactly how checkpointing lays them out under a leading
+    pod-axis spec — see `trainer.init_dp_err`).
+
+    Per-device egress per leaf: ~2*(n-1)/n * |leaf| int8 + 8*(n-1)
+    scale bytes — the same ~4x under the f32 ring at any n, unlike the
+    gather scheme's (8/n)x (module docstring).
+    """
+    n = jax.lax.psum(1, axis)
+
+    def one(g, e1, e2):
+        t = g.astype(jnp.float32) + e1
+        t = jnp.where(jnp.isfinite(t), t, 0.0)
+        size = t.size
+        shard = -(-size // n)  # ceil: per-device shard length
+        flat = jnp.pad(t.reshape(-1), (0, shard * n - size))
+        q1, s1 = quantize_leaf(flat)
+        new_e1 = (flat - dequantize_leaf(q1, s1))[:size].reshape(t.shape)
+        # stage-1 exchange: row j of `chunks` is this device's shard-j
+        # chunk; after the tiled all_to_all, row j holds peer j's chunk
+        # for the shard THIS device owns.
+        chunks = q1.reshape(n, shard)
+        recv = jax.lax.all_to_all(
+            chunks, axis, split_axis=0, concat_axis=0, tiled=True
+        )
+        s1_all = jax.lax.all_gather(s1, axis)  # (n,) f32
+        own = jnp.sum(recv.astype(jnp.float32) * s1_all[:, None], 0) / n
+        # stage-2: re-quantize the owned shard, gather all shards back
+        u = own + e2
+        u = jnp.where(jnp.isfinite(u), u, 0.0)
+        q2, s2 = quantize_leaf(u)
+        new_e2 = u - dequantize_leaf(q2, s2)
+        q2_all = jax.lax.all_gather(q2, axis)  # (n, shard) int8
+        s2_all = jax.lax.all_gather(s2, axis)  # (n,) f32
+        mean = (q2_all.astype(jnp.float32) * s2_all[:, None]).reshape(-1)
+        return mean[:size].reshape(t.shape), new_e1, new_e2
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e1 = treedef.flatten_up_to(err1)
+    flat_e2 = treedef.flatten_up_to(err2)
+    ms, n1s, n2s = [], [], []
+    for g, e1, e2 in zip(flat_g, flat_e1, flat_e2):
+        m, a, b = one(g, e1, e2)
+        ms.append(m)
+        n1s.append(a)
+        n2s.append(b)
+    unflat = jax.tree_util.tree_unflatten
+    return unflat(treedef, ms), unflat(treedef, n1s), unflat(treedef, n2s)
+
+
+def two_stage_shard_len(size: int, n: int) -> int:
+    """Length of the per-device stage-2 shard (and err2 buffer) for a
+    leaf of `size` elements reduced over `n` devices: ceil(size/n)."""
+    return -(-size // n)
+
+
+def uncompressed_psum_mean(
+    grads: Any, axis: str, *, finite_guard: bool = True
+) -> Any:
+    """Baseline: plain f32 pmean over `axis` (inside shard_map).
+
+    By default non-finite entries are zeroed before the reduction —
+    the same guard the compressed paths apply pre-quantization — so
+    `compress=False` ablations share failure semantics with the
+    compressed run instead of broadcasting one pod's inf/NaN to every
+    replica. `finite_guard=False` opts out (raw IEEE propagation, the
+    pre-guard behavior)."""
+    def one(g):
+        if finite_guard:
+            g = jnp.where(jnp.isfinite(g), g, jnp.zeros((), g.dtype))
+        return jax.lax.pmean(g, axis)
+
+    return jax.tree.map(one, grads)

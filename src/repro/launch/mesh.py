@@ -48,6 +48,43 @@ def parse_mesh_spec(spec: str) -> tuple[int, int]:
     raise ValueError(f"mesh spec {spec!r}: expected 'D' or 'DxM'")
 
 
+def parse_multipod_spec(spec: str) -> tuple[int, int, int]:
+    """CLI multi-pod mesh spec -> (n_pod, n_data, n_model). "2x4" means
+    2 pods x 4-way in-pod data parallel; "2x2x2" adds a 2-way in-pod
+    model (TP) axis."""
+    parts = spec.lower().split("x")
+    if len(parts) == 2:
+        return int(parts[0]), int(parts[1]), 1
+    if len(parts) == 3:
+        return int(parts[0]), int(parts[1]), int(parts[2])
+    raise ValueError(
+        f"multi-pod spec {spec!r}: expected 'PxD' or 'PxDxM' "
+        f"(pods x data [x model])"
+    )
+
+
+def make_multipod_mesh(spec: str) -> jax.sharding.Mesh:
+    """('PxD' | 'PxDxM') -> a ("pod", "data", "model") mesh over the
+    first P*D*M host devices — the nested-mesh shape
+    `trainer.make_multipod_train_step` composes over: the pod axis is
+    pure DP through `dist.compression`, the in-pod axes keep XLA
+    collectives. On a CPU container, force host devices before any jax
+    import: XLA_FLAGS=--xla_force_host_platform_device_count=<P*D*M>."""
+    n_pod, n_data, n_model = parse_multipod_spec(spec)
+    need, avail = n_pod * n_data * n_model, jax.device_count()
+    if need > avail:
+        raise SystemExit(
+            f"--multi-pod {spec} needs {need} devices but only {avail} "
+            f"available; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need}"
+        )
+    return jax.make_mesh(
+        (n_pod, n_data, n_model), ("pod", "data", "model"),
+        devices=jax.devices()[:need],
+        axis_types=(jax.sharding.AxisType.Auto,) * 3,
+    )
+
+
 def make_serving_mesh(spec: str) -> jax.sharding.Mesh:
     """('D' | 'DxM') -> a ("data", "model") mesh over the first D*M host
     devices. On a CPU container, force host devices before any jax

@@ -8,7 +8,17 @@ Layout:  <dir>/step_<N>/
 Atomicity: each checkpoint is written into `step_<N>.tmp` and
 `os.rename`d into place (rename is atomic on POSIX), then LATEST is
 updated the same way — a crash mid-save can never corrupt the newest
-complete checkpoint (tested by interrupting saves).
+complete checkpoint (tested by interrupting saves). Keep-k GC never
+prunes the just-saved step or the LATEST target even when saves land
+out of order (rollback re-saves), and deletes meta.json before the
+dir so an interrupted prune leaves an invisible partial, not a
+listed-but-unloadable step (see `_gc`).
+
+State is whatever pytree the trainer carries — including the
+compressed-DP error-feedback buffers (`trainer.init_dp_err`), whose
+leading pod-axis layout makes every pod's residual part of the saved
+array; restoring them bitwise is what keeps the telescoping
+compression lossless across restarts.
 
 Elasticity: arrays are saved *unsharded* (gathered to host) with their
 logical paths. `restore(..., shardings=...)` device_puts each leaf under
@@ -60,7 +70,7 @@ def save(state: Any, ckpt_dir: str, step: int, *, keep: int = 3) -> str:
         shutil.rmtree(final)
     os.rename(tmp, final)
     _update_latest(ckpt_dir, step)
-    _gc(ckpt_dir, keep)
+    _gc(ckpt_dir, keep, protect=(step,))
     return final
 
 
@@ -71,11 +81,60 @@ def _update_latest(ckpt_dir: str, step: int) -> None:
     os.rename(tmp, os.path.join(ckpt_dir, "LATEST"))
 
 
-def _gc(ckpt_dir: str, keep: int) -> None:
+def _latest_pointer(ckpt_dir: str) -> Optional[int]:
+    """Raw LATEST file contents (no completeness check), or None."""
+    path = os.path.join(ckpt_dir, "LATEST")
+    try:
+        with open(path) as f:
+            return int(f.read().strip())
+    except (OSError, ValueError):
+        return None
+
+
+def _gc(ckpt_dir: str, keep: int, *, protect: tuple = ()) -> None:
+    """Prune step dirs down to the newest `keep` at-or-below the
+    just-saved step (`protect`, the lineage frontier), never touching
+    the protected step or the LATEST target, and deleting everything
+    ABOVE the frontier.
+
+    Saves can land out of order: `fault.run_training` rolls back to an
+    earlier checkpoint on failure and re-saves *lower* step numbers
+    into a dir that still holds higher ones. Pruning purely by "oldest
+    step number" would then delete the checkpoint LATEST was just
+    pointed at, leaving a dangling pointer whose fallback
+    (`latest_step` -> newest complete dir) resumes from a FUTURE step
+    the rolled-back state never reached — and merely protecting the
+    saved step would still spend the keep-k budget on those dead
+    future dirs while the live lineage's history gets pruned. Steps
+    beyond the frontier belong to the abandoned lineage (deterministic
+    replay regenerates them bitwise), so they are deleted outright:
+    after any save, every on-disk checkpoint is <= the step LATEST
+    points at, and the fallback can never jump forward.
+
+    Deletion removes meta.json first: `all_steps` treats a dir without
+    meta.json as nonexistent, so a prune interrupted mid-`rmtree` (or a
+    partial failure swallowed by ignore_errors) leaves an invisible
+    partial dir rather than a listed-but-unloadable checkpoint that the
+    LATEST-lost fallback could select."""
     steps = all_steps(ckpt_dir)
-    for s in steps[:-keep]:
-        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
-                      ignore_errors=True)
+    frontier = max(protect) if protect else None
+    if frontier is not None:
+        live = [s for s in steps if s <= frontier]
+    else:
+        live = steps
+    keep_set = set(live[-keep:]) | set(protect)
+    latest = _latest_pointer(ckpt_dir)
+    if latest is not None and (frontier is None or latest <= frontier):
+        keep_set.add(latest)
+    for s in steps:
+        if s in keep_set:
+            continue
+        path = os.path.join(ckpt_dir, f"step_{s:08d}")
+        try:
+            os.remove(os.path.join(path, "meta.json"))
+        except OSError:
+            pass
+        shutil.rmtree(path, ignore_errors=True)
 
 
 def all_steps(ckpt_dir: str) -> list[int]:

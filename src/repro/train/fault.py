@@ -80,12 +80,20 @@ def run_training(
     watchdog: Optional[StragglerWatchdog] = None,
     log_every: int = 10,
     metrics_cb: Optional[Callable[[int, dict], None]] = None,
+    restore_shardings: Optional[Any] = None,
 ) -> tuple[Any, list[dict]]:
     """Checkpoint-restart training loop.
 
     Deterministic replay contract: `batch_at(step)` must return the same
     batch for the same step on every host/retry. Returns (final_state,
     metric history).
+
+    `restore_shardings` (a NamedSharding pytree mirroring `state`)
+    places every restored leaf under the current mesh on resume — the
+    multi-pod path passes the trainer's state shardings here so the
+    whole state, error-feedback buffers included, comes back exactly
+    where the step functions expect it (restarts preserve the
+    compression telescoping bitwise).
     """
     from repro.train import checkpoint as ckpt
 
@@ -95,7 +103,10 @@ def run_training(
     if ckpt_dir is not None:
         latest = ckpt.latest_step(ckpt_dir)
         if latest is not None:
-            state, step = ckpt.restore(ckpt_dir, state, step=latest)
+            state, step = ckpt.restore(
+                ckpt_dir, state, step=latest,
+                shardings=restore_shardings,
+            )
             logger.info("resumed from checkpoint step %d", step)
 
     history: list[dict] = []
@@ -117,7 +128,10 @@ def run_training(
             if ckpt_dir is not None:
                 latest = ckpt.latest_step(ckpt_dir)
                 if latest is not None:
-                    state, step = ckpt.restore(ckpt_dir, state, step=latest)
+                    state, step = ckpt.restore(
+                        ckpt_dir, state, step=latest,
+                        shardings=restore_shardings,
+                    )
             continue
         retries = 0
         dt = time.monotonic() - t0

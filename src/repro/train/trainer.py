@@ -11,13 +11,22 @@ with in/out shardings derived from `dist.sharding` — this exact jitted
 function is what the dry-run lowers and what `launch/train.py` runs, so
 the dry-run proves the production path, not a stand-in.
 
-State is a plain dict pytree {"params", "opt", "step"} so checkpointing
-and resharding stay structure-generic.
+Multi-pod: `make_dp_step_compressed` is the pure shard_map DP step over
+a pod axis (quantized gradient reduction via `dist.compression`,
+scheme-selectable), and `make_multipod_train_step` composes the in-pod
+sharded pjit step with that pod-axis reduction for
+`launch/train.py --multi-pod`. Both carry per-pod error-feedback
+buffers in state["err"] (`init_dp_err`), sharded P("pod") so
+checkpoints capture every pod's residual.
+
+State is a plain dict pytree {"params", "opt", "step"[, "err"]} so
+checkpointing and resharding stay structure-generic.
 """
 
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any, Callable, Optional
 
 import jax
@@ -125,6 +134,72 @@ def make_sharded_train_step(
 # Manual-DP step with compressed cross-pod gradients (shard_map)
 # ---------------------------------------------------------------------------
 
+_SCHEMES = ("gather", "two_stage")
+
+
+def init_dp_err(
+    params: Any,
+    mesh: Mesh,
+    *,
+    axis: str = "pod",
+    scheme: str = "gather",
+    compress: bool = True,
+) -> dict:
+    """Zero error-feedback buffers for the compressed-DP steps, shaped
+    for checkpointing: every leaf carries a leading (n_pods,) dim and is
+    sharded `P(axis)` in the step, so each pod's residuals round-trip
+    through `train.checkpoint` faithfully (the gathered array holds ALL
+    pods' buffers, not one pod's copy). Restoring on a different pod
+    count would silently break the telescoping identity, so shape
+    mismatch fails loudly in `checkpoint.restore`.
+
+      gather:    {"s1": tree[(n, *leaf.shape)]}
+      two_stage: {"s1": tree[(n, *leaf.shape)],
+                  "s2": tree[(n, ceil(|leaf|/n))]}
+      compress=False: {} (the uncompressed path is stateless)
+    """
+    from repro.dist import compression as C
+
+    if not compress:
+        return {}
+    if scheme not in _SCHEMES:
+        raise ValueError(f"scheme {scheme!r}: expected one of {_SCHEMES}")
+    n = mesh.shape[axis]
+    err = {
+        "s1": jax.tree.map(
+            lambda p: jnp.zeros((n,) + tuple(p.shape), jnp.float32), params
+        )
+    }
+    if scheme == "two_stage":
+        err["s2"] = jax.tree.map(
+            lambda p: jnp.zeros(
+                (n, C.two_stage_shard_len(math.prod(p.shape) or 1, n)),
+                jnp.float32,
+            ),
+            params,
+        )
+    return err
+
+
+def _reduce_grads(grads, err, axis, *, compress, scheme):
+    """Scheme dispatch shared by the DP steps (called inside shard_map;
+    err leaves arrive with their leading (1,)-sized pod-block dim)."""
+    from repro.dist import compression as C
+
+    if not compress:
+        return C.uncompressed_psum_mean(grads, axis), err
+    sq = lambda t: jax.tree.map(lambda x: x[0], t)  # noqa: E731
+    ex = lambda t: jax.tree.map(lambda x: x[None], t)  # noqa: E731
+    if scheme == "gather":
+        mean, s1 = C.compressed_psum_mean(grads, sq(err["s1"]), axis)
+        return mean, {"s1": ex(s1)}
+    if scheme == "two_stage":
+        mean, s1, s2 = C.two_stage_psum_mean(
+            grads, sq(err["s1"]), sq(err["s2"]), axis
+        )
+        return mean, {"s1": ex(s1), "s2": ex(s2)}
+    raise ValueError(f"scheme {scheme!r}: expected one of {_SCHEMES}")
+
 
 def make_dp_step_compressed(
     loss_fn: Callable,
@@ -134,29 +209,39 @@ def make_dp_step_compressed(
     axis: str = "pod",
     clip_norm: float = 1.0,
     compress: bool = True,
+    scheme: str = "gather",
 ):
-    """Data-parallel train step over `axis` with int8+error-feedback
-    gradient reduction (dist.compression). Params replicated over `axis`;
-    batch sharded. State carries the error buffer.
+    """Data-parallel train step over `axis` with quantized
+    error-feedback gradient reduction (dist.compression). Params
+    replicated over `axis`; batch sharded. State is
+    {"params", "opt", "step", "err"} with `err` from `init_dp_err` —
+    per-pod buffers sharded P(axis), so checkpoints capture every pod's
+    residual and a restart preserves the telescoping-losslessness
+    invariant bitwise.
+
+    `scheme` picks the wire layout: "gather" (full-leaf int8
+    all-gather, (8/n)x egress) or "two_stage" (quantized reduce-scatter
+    + all-gather, n-independent ~4x) — crossover guidance in
+    `dist.compression`'s docstring. `compress=False` runs the
+    finite-guarded f32 pmean baseline (stateless, err stays {}).
 
     This is the cross-pod communication mode for multi-pod training —
-    in-pod axes still use pjit/XLA collectives inside `loss_fn`.
+    in-pod axes still use pjit/XLA collectives inside `loss_fn`; for
+    the launcher's composed in-pod-sharded variant see
+    `make_multipod_train_step`.
     """
     from jax.experimental.shard_map import shard_map
 
-    from repro.dist import compression as C
+    if compress and scheme not in _SCHEMES:
+        raise ValueError(f"scheme {scheme!r}: expected one of {_SCHEMES}")
 
     def local_step(state, batch):
         (loss, metrics), grads = jax.value_and_grad(
             loss_fn, has_aux=True
         )(state["params"], batch)
-        if compress:
-            grads, new_err = C.compressed_psum_mean(
-                grads, state["err"], axis
-            )
-        else:
-            grads = C.uncompressed_psum_mean(grads, axis)
-            new_err = state["err"]
+        grads, new_err = _reduce_grads(
+            grads, state["err"], axis, compress=compress, scheme=scheme
+        )
         if clip_norm:
             grads, gnorm = clip_by_global_norm(grads, clip_norm)
         else:
@@ -178,7 +263,7 @@ def make_dp_step_compressed(
 
     rep = P()  # replicated across the dp axis
     dp = P(axis)
-    state_spec = {"params": rep, "opt": rep, "step": rep, "err": rep}
+    state_spec = {"params": rep, "opt": rep, "step": rep, "err": dp}
     return shard_map(
         local_step,
         mesh=mesh,
@@ -186,3 +271,175 @@ def make_dp_step_compressed(
         out_specs=(state_spec, rep),
         check_rep=False,
     )
+
+
+# ---------------------------------------------------------------------------
+# Composed multi-pod step: in-pod pjit + cross-pod compressed shard_map
+# ---------------------------------------------------------------------------
+
+
+def make_multipod_train_step(
+    loss_fn: Callable,
+    optimizer: Optimizer,
+    cfg,
+    mesh: Mesh,
+    state_shapes: Any,
+    *,
+    scheme: str = "gather",
+    compress: bool = True,
+    clip_norm: float = 1.0,
+    n_micro: int = 1,
+    donate: bool = True,
+):
+    """Compressed multi-pod data-parallel training over a
+    ("pod", "data", "model") mesh: the in-pod axes stay a sharded pjit
+    step (XLA bf16/f32 collectives over ICI), only the pod axis routes
+    through `dist.compression`. Three stages per step:
+
+      A. per-pod gradients — `vmap(value_and_grad(loss_fn))` over a
+         leading pod dim under jit: batch sharded ("pod", "data"),
+         params sharded by `dist.sharding.param_specs` (data/model,
+         replicated over pod). No cross-pod collectives: the pod dim is
+         a batched dim, grads come out P("pod")-sharded.
+      B. cross-pod reduction — full-manual shard_map over the whole
+         mesh running the selected `dist.compression` scheme along
+         "pod" (the exact collectives `benchmarks/dist_compression.py`
+         accounts). Grads enter replicated over the in-pod axes (the
+         gather at stage-A's exit is in-pod ICI traffic), so the error
+         buffers' shapes depend only on the pod count, never the in-pod
+         layout — checkpoints stay portable across in-pod reshapes.
+      C. optimizer update — pjit under the ZeRO-1 `state_specs`
+         shardings (clip + update on the replicated mean grads).
+
+    The pod axis cannot be partial-manual on this jax/XLA: gather-family
+    collectives inside a manual subgroup with auto in-pod axes abort the
+    SPMD partitioner (spmd_partitioner.cc:512 IsManualSubgroup check),
+    which is why the reduction runs full-manual on pod-replicated
+    blocks instead.
+
+    `state_shapes` is `jax.eval_shape` of the full state INCLUDING
+    "err" (`init_dp_err`). Returns (py_step, state_shardings):
+    `py_step(state, batch) -> (state, metrics)` reshapes flat
+    (B, ...) batch leaves to (n_pod, B/n_pod, ...) internally — B must
+    divide by the pod count — and is what `fault.run_training` drives;
+    `state_shardings` feeds checkpoint-restore placement.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    if compress and scheme not in _SCHEMES:
+        raise ValueError(f"scheme {scheme!r}: expected one of {_SCHEMES}")
+    if "pod" not in mesh.axis_names:
+        raise ValueError(
+            f"make_multipod_train_step needs a 'pod' mesh axis, got "
+            f"{mesh.axis_names} (launch.mesh.make_multipod_mesh)"
+        )
+    n_pod = mesh.shape["pod"]
+    n_data = mesh.shape.get("data", 1)
+
+    core_shapes = {k: state_shapes[k] for k in ("params", "opt", "step")}
+    core_specs = state_specs(core_shapes, cfg, mesh)
+    core_shard = shd.named(core_specs, mesh)
+    p_shard = core_shard["params"]
+    err_spec = jax.tree.map(lambda _: P("pod"), state_shapes["err"])
+    err_shard = shd.named(err_spec, mesh)
+    state_shardings = {**core_shard, "err": err_shard}
+
+    # ---- stage A: per-pod grads (pjit, in-pod axes auto) ----
+    def grad_one(p, b):
+        def gf(pp, mb):
+            (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(pp, mb)
+            return g, m
+
+        return accumulate_grads(gf, p, b, n_micro)
+
+    def pod_batch_spec(leaf):
+        b_local = leaf.shape[0] // n_pod
+        d = "data" if n_data <= 1 or b_local % n_data == 0 else None
+        return P("pod", d, *([None] * (len(leaf.shape) - 2)))
+
+    def pod_batch_shard(batch):
+        return jax.tree.map(
+            lambda x: jax.sharding.NamedSharding(mesh, pod_batch_spec(x)),
+            batch,
+        )
+
+    g_shard = jax.tree.map(
+        lambda _: jax.sharding.NamedSharding(mesh, P("pod")),
+        state_shapes["params"],
+    )
+
+    # ---- stage B: cross-pod compressed reduction (full-manual) ----
+    def reduce_body(grads, err):
+        grads = jax.tree.map(lambda x: x[0], grads)  # (1, *leaf) block
+        mean, new_err = _reduce_grads(
+            grads, err, "pod", compress=compress, scheme=scheme
+        )
+        return mean, new_err
+
+    g_spec = jax.tree.map(lambda _: P("pod"), state_shapes["params"])
+    mean_spec = jax.tree.map(lambda _: P(), state_shapes["params"])
+    step_b = jax.jit(
+        shard_map(
+            reduce_body,
+            mesh=mesh,
+            in_specs=(g_spec, err_spec),
+            out_specs=(mean_spec, err_spec),
+            check_rep=False,
+        ),
+        in_shardings=(g_shard, err_shard),
+        out_shardings=(shd.named(mean_spec, mesh), err_shard),
+        donate_argnums=(1,) if donate else (),
+    )
+
+    # ---- stage C: optimizer update (pjit, ZeRO-1 shardings) ----
+    def update_core(core, grads):
+        if clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            from repro.optim import global_norm
+
+            gnorm = global_norm(grads)
+        updates, opt = optimizer.update(
+            grads, core["opt"], core["params"], core["step"]
+        )
+        return {
+            "params": apply_updates(core["params"], updates),
+            "opt": opt,
+            "step": core["step"] + 1,
+        }, gnorm
+
+    step_c = jax.jit(
+        update_core,
+        in_shardings=(core_shard, shd.named(mean_spec, mesh)),
+        out_shardings=(core_shard, None),
+        donate_argnums=(0,) if donate else (),
+    )
+
+    step_a = None  # compiled lazily: in_shardings depend on batch shapes
+
+    def py_step(state: dict, batch: Any) -> tuple[dict, dict]:
+        nonlocal step_a
+        leading = jax.tree.leaves(batch)[0].shape[0]
+        if leading % n_pod:
+            raise ValueError(
+                f"multi-pod batch {leading} not divisible by "
+                f"{n_pod} pods"
+            )
+        pb = jax.tree.map(
+            lambda x: x.reshape((n_pod, -1) + x.shape[1:]), batch
+        )
+        if step_a is None:
+            step_a = jax.jit(
+                jax.vmap(grad_one, in_axes=(None, 0)),
+                in_shardings=(p_shard, pod_batch_shard(pb)),
+                out_shardings=(g_shard, None),
+            )
+        grads, metrics = step_a(state["params"], pb)
+        mean_g, new_err = step_b(grads, state["err"])
+        core = {k: state[k] for k in ("params", "opt", "step")}
+        new_core, gnorm = step_c(core, mean_g)
+        metrics = {k: jnp.mean(v) for k, v in metrics.items()}
+        metrics["grad_norm"] = gnorm
+        return {**new_core, "err": new_err}, metrics
+
+    return py_step, state_shardings

@@ -136,3 +136,49 @@ def test_compressed_psum_mean_single_device():
     mean, new_e = f(g, e)
     np.testing.assert_allclose(mean["w"] + new_e["w"], g["w"], rtol=1e-4,
                                atol=1e-4)
+
+
+def test_two_stage_single_device_telescopes():
+    """n=1 degenerates to double quantization of the same leaf; the
+    output plus both residuals still reconstructs the input exactly."""
+    from jax.experimental.shard_map import shard_map
+
+    mesh = jax.make_mesh((1,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    g = {"w": jax.random.normal(jax.random.PRNGKey(3), (37,))}  # odd size
+    e1 = {"w": jnp.zeros(37)}
+    e2 = {"w": jnp.zeros(C.two_stage_shard_len(37, 1))}
+    f = shard_map(
+        lambda a, b, c: C.two_stage_psum_mean(a, b, c, "pod"),
+        mesh=mesh, in_specs=(P(), P(), P()), out_specs=(P(), P(), P()),
+        check_rep=False,
+    )
+    mean, n1, n2 = f(g, e1, e2)
+    np.testing.assert_allclose(
+        np.asarray(mean["w"] + n1["w"] + n2["w"][:37]),
+        np.asarray(g["w"]), rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_uncompressed_finite_guard():
+    """`compress=False` shares failure semantics with the compressed
+    path by default: non-finite entries are zeroed, not propagated;
+    `finite_guard=False` is the documented raw-IEEE opt-out."""
+    from jax.experimental.shard_map import shard_map
+
+    mesh = jax.make_mesh((1,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    g = {"w": jnp.array([1.0, jnp.inf, -jnp.inf, jnp.nan, 2.0])}
+
+    def run(**kw):
+        return shard_map(
+            lambda gg: C.uncompressed_psum_mean(gg, "pod", **kw),
+            mesh=mesh, in_specs=(P(),), out_specs=P(), check_rep=False,
+        )(g)
+
+    guarded = run()
+    np.testing.assert_array_equal(
+        np.asarray(guarded["w"]), [1.0, 0.0, 0.0, 0.0, 2.0]
+    )
+    raw = run(finite_guard=False)
+    assert not bool(jnp.isfinite(raw["w"]).all())

@@ -88,6 +88,55 @@ def test_checkpoint_interrupted_save_is_invisible(tmp_path):
     assert s == 1
 
 
+def test_gc_out_of_order_save_never_dangles_latest(tmp_path):
+    """Fault recovery re-saves LOWER step numbers into a dir holding
+    higher ones (rollback + replay). Keep-k GC must never prune the
+    just-saved step — the old oldest-step-number policy deleted it and
+    left LATEST dangling, so the fallback resumed from a FUTURE
+    checkpoint the rolled-back training state never reached. Steps
+    beyond the rollback point are the abandoned lineage (deterministic
+    replay regenerates them) and are pruned outright, so the fallback
+    cannot jump forward even if LATEST is later lost."""
+    state = {"w": np.arange(4.0)}
+    for s in (10, 20, 30, 40):
+        ckpt.save(state, str(tmp_path), s, keep=3)
+    # rollback: training restarted from an earlier checkpoint and
+    # reached its next ckpt_every boundary below the stale maximum
+    rolled = {"w": np.arange(4.0) * 2}
+    ckpt.save(rolled, str(tmp_path), 15, keep=3)
+    assert ckpt.latest_step(str(tmp_path)) == 15
+    restored, s = ckpt.restore(str(tmp_path), state)
+    assert s == 15
+    np.testing.assert_array_equal(restored["w"], rolled["w"])
+    # every dead future dir is gone (10 already fell to plain keep-3)
+    assert ckpt.all_steps(str(tmp_path)) == [15]
+    # even with LATEST lost, the fallback can only see the live lineage
+    os.remove(os.path.join(str(tmp_path), "LATEST"))
+    assert ckpt.latest_step(str(tmp_path)) == 15
+    # ...and resuming again keeps honoring the rollback point
+    ckpt.save(rolled, str(tmp_path), 16, keep=3)
+    assert ckpt.latest_step(str(tmp_path)) == 16
+    assert ckpt.all_steps(str(tmp_path)) == [15, 16]
+
+
+def test_gc_interrupted_prune_leaves_no_unloadable_step(tmp_path):
+    """GC deletes meta.json before the dir: a prune interrupted
+    mid-rmtree (or a deletion swallowed by ignore_errors) leaves a dir
+    `all_steps` cannot see, so the LATEST-lost fallback can never
+    select a checkpoint whose arrays are half-deleted."""
+    state = {"w": np.arange(4.0)}
+    for s in (1, 2, 3):
+        ckpt.save(state, str(tmp_path), s, keep=10)
+    # simulate the partial prune: meta gone, arrays still on disk
+    os.remove(os.path.join(str(tmp_path), "step_00000002", "meta.json"))
+    assert ckpt.all_steps(str(tmp_path)) == [1, 3]
+    # LATEST lost -> fallback must pick a complete checkpoint
+    os.remove(os.path.join(str(tmp_path), "LATEST"))
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    _, s = ckpt.restore(str(tmp_path), state)
+    assert s == 3
+
+
 def test_elastic_restore_with_shardings(tmp_path):
     """Restore device_puts under explicitly provided shardings (the mesh
     may differ from the saving job's)."""
