@@ -32,6 +32,15 @@ per-device cache bytes < the replicated baseline, modeled tokens/s
 scaling with device count, valid (guard-checked) placements, and
 pool-size-independent admission cost.
 
+Telemetry: the emitted record carries a `telemetry` section in the
+shared `repro.obs.telemetry_section` schema — {schema_version, enabled,
+counters, gauges, histograms (count/sum/min/max/mean/p50/p90/p99/p999
+per name, e.g. `serve.ttft_s`, `serve.inter_token_s`), recompiles (per
+compiled cell, including per-admission-width `serve.prefill.w*`),
+peak_device_memory_bytes} — identical across BENCH_stream/BENCH_decode/
+BENCH_dist. The admission engines' registry counters are asserted to
+mirror the engines' own `admission_rowsteps`/`admission_prefills`.
+
     PYTHONPATH=src python benchmarks/decode_throughput.py [--smoke]
 """
 
@@ -52,7 +61,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import configs, obs
 from repro.launch.mesh import make_serving_mesh, parse_mesh_spec
 from repro.models import api
 from repro.serve import engine as E
@@ -209,6 +218,9 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_decode.json")
     args = ap.parse_args()
 
+    # before any engine compiles, so jit cells register with the probe
+    obs.configure(enabled=True)
+
     mesh_specs = ["1", "8", "4x2"] if args.smoke else [
         "1", "2", "4", "8", "4x2"
     ]
@@ -267,6 +279,7 @@ def main() -> None:
 
     admission = measure_admission(ARCHS[0], prompt_len=args.prompt_len)
 
+    telemetry = obs.telemetry_section()
     rec = {
         "n_host_devices": jax.device_count(),
         "hbm_bw_bytes_per_s": HBM_BW_BYTES_PER_S,
@@ -274,6 +287,7 @@ def main() -> None:
         "cells": cells,
         "scaling": scaling,
         "admission": admission,
+        "telemetry": telemetry,
     }
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=1)
@@ -319,6 +333,29 @@ def main() -> None:
             big["admission_rowsteps"]
             < big["replay_rowsteps_counterfactual"]
         ), big
+    # telemetry gates: the registry's admission counters mirror the
+    # engines' own accounting exactly (summed over every admission
+    # cell in this process), the per-request latency histograms are
+    # populated with percentiles, and every compiled admission width
+    # shows up in the recompile map
+    t = telemetry
+    assert t["schema_version"] == obs.SCHEMA_VERSION and t["enabled"]
+    assert t["counters"]["serve.admission_rowsteps"] == sum(
+        c["admission_rowsteps"] for c in admission
+    ), t["counters"]
+    assert t["counters"]["serve.admission_prefills"] == sum(
+        c["admission_prefills"] for c in admission
+    ), t["counters"]
+    for name in ("serve.ttft_s", "serve.inter_token_s"):
+        h = t["histograms"][name]
+        assert h["count"] > 0 and None not in (
+            h["p50"], h["p99"], h["p999"]
+        ), (name, h)
+    assert "serve.decode_step" in t["recompiles"], t["recompiles"]
+    assert any(
+        k.startswith("serve.prefill.w") for k in t["recompiles"]
+    ), t["recompiles"]
+    assert t["peak_device_memory_bytes"] > 0, t
 
 
 if __name__ == "__main__":

@@ -27,7 +27,13 @@ Asserted here (and therefore in `scripts/ci.sh`, which runs this):
   * every scheme's loss curve decreases, compressed finals within
     tolerance of the f32 baseline.
 
-Emits BENCH_dist.json. Device count comes from
+Emits BENCH_dist.json, including a `telemetry` section in the shared
+`repro.obs.telemetry_section` schema — {schema_version, enabled,
+counters, gauges, histograms (count/sum/min/max/mean/p50/p90/p99/p999
+per name, e.g. `train.step_latency_s`), recompiles (per compiled cell:
+the per-scheme reduction jits and convergence train steps),
+peak_device_memory_bytes} — identical across BENCH_stream/BENCH_decode/
+BENCH_dist. Device count comes from
 XLA_FLAGS=--xla_force_host_platform_device_count (forced to 8 here
 unless already set; must precede any jax import).
 
@@ -53,7 +59,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro import configs, optim
+from repro import configs, obs, optim
 from repro.data import lm
 from repro.launch.hlo_count import weighted_cost
 from repro.models import api
@@ -160,6 +166,7 @@ def sweep(grads, pod_counts) -> list[dict]:
         eg = modeled_egress(grads, n)
         for scheme in SCHEMES:
             fn, args = _reduction_fn(scheme, mesh, grads)
+            obs.get().probe.track(f"dist.reduce.{scheme}.n{n}", fn)
             wc = weighted_cost(fn.lower(*args).compile().as_text())
             cells.append({
                 "n_pods": n,
@@ -198,16 +205,32 @@ def convergence(arch: str, steps: int) -> dict:
         state["err"] = trainer.init_dp_err(
             params, mesh, scheme=scheme, compress=compress
         )
-        step = jax.jit(trainer.make_dp_step_compressed(
-            model.loss, opt, mesh, scheme=scheme, compress=compress
-        ))
+        # Seat the initial state on the pod mesh with the step's output
+        # sharding (replicated): otherwise the first call traces for
+        # uncommitted single-device inputs and the second call retraces
+        # for NamedSharding outputs — a silent 2x compile the recompile
+        # telemetry (and the check() gate below) would flag.
+        repl = jax.sharding.NamedSharding(mesh, P())
+        for k in ("params", "opt", "step"):
+            state[k] = jax.device_put(state[k], repl)
+        step = obs.get().probe.track(
+            f"train.dp_step.{mode}",
+            jax.jit(trainer.make_dp_step_compressed(
+                model.loss, opt, mesh, scheme=scheme, compress=compress
+            )),
+        )
         stream = lm.TokenStream(
             batch=8, seq_len=16, vocab=cfg.vocab, seed=0
         )
+        tel = obs.get()
+        step_hist = tel.registry.histogram("train.step_latency_s")
         losses = []
         for i in range(steps):
-            state, m = step(state, stream.batch_at(i))
-            losses.append(round(float(m["loss"]), 6))
+            t0 = time.perf_counter()
+            with tel.span("train/step", cat="train", mode=mode, step=i):
+                state, m = step(state, stream.batch_at(i))
+                losses.append(round(float(m["loss"]), 6))
+            step_hist.observe(time.perf_counter() - t0)
         curves[mode] = losses
         print(
             f"[dist_compression] convergence {mode:>9}: "
@@ -256,6 +279,21 @@ def check(rec: dict) -> None:
         assert abs(cv[mode][-1] - f32_final) < max(0.25 * drop, 0.05), (
             mode, cv[mode][-1], f32_final
         )
+    # telemetry gates: step-latency percentiles present for the
+    # convergence runs, every per-scheme jitted cell in the recompile
+    # map with exactly the expected compiled-variant count (one shape
+    # each — any retrace after warmup would show here)
+    t = rec["telemetry"]
+    assert t["schema_version"] == obs.SCHEMA_VERSION and t["enabled"]
+    h = t["histograms"]["train.step_latency_s"]
+    assert h["count"] > 0 and None not in (
+        h["p50"], h["p99"], h["p999"]
+    ), h
+    for mode in ("f32", "gather", "two_stage"):
+        assert t["recompiles"].get(f"train.dp_step.{mode}") == 1, (
+            mode, t["recompiles"]
+        )
+    assert t["peak_device_memory_bytes"] > 0, t
 
 
 def run(arch: str, out_path: str, *, steps: int) -> dict:
@@ -268,6 +306,9 @@ def run(arch: str, out_path: str, *, steps: int) -> dict:
             f"--xla_force_host_platform_device_count=8 overrides the "
             f"default this script would apply"
         )
+    # before the reduction/step jits compile, so they register with
+    # the probe
+    obs.configure(enabled=True)
     cfg, grads = grad_tree(arch)
     rec = {
         "arch": cfg.name,
@@ -276,6 +317,7 @@ def run(arch: str, out_path: str, *, steps: int) -> dict:
         "grad_bytes": _nbytes(grads),
         "sweep": sweep(grads, pod_counts),
         "convergence": convergence(arch, steps),
+        "telemetry": obs.telemetry_section(),
     }
     check(rec)
     rec["checked"] = True

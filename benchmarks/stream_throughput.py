@@ -20,6 +20,14 @@ must sustain real-time rate (one 512-sample segment per patient per
 reduced sweep, and asserts both criteria. CI runs it on 8 forced host
 devices (scripts/ci.sh).
 
+Telemetry: the emitted record carries a `telemetry` section in the
+shared `repro.obs.telemetry_section` schema — {schema_version, enabled,
+counters, gauges, histograms (count/sum/min/max/mean/p50/p90/p99/p999
+per name, e.g. `stream.flush_wall_s`), recompiles (per compiled cell),
+peak_device_memory_bytes} — identical across BENCH_stream/BENCH_decode/
+BENCH_dist, plus an `overhead` sub-record: enabled-vs-disabled wall
+clock of the same fleet config on one shared runner, asserted < 3%.
+
     PYTHONPATH=src python benchmarks/stream_throughput.py [--smoke]
 """
 
@@ -34,11 +42,14 @@ if "--xla_force_host_platform_device_count" not in os.environ.get(
     ).strip()
 
 import argparse
+import gc
 import json
+import time
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import compiler, vadetect
 from repro.launch.stream import make_data_mesh
 from repro.stream import (
@@ -117,6 +128,56 @@ def run_cell(
     }
 
 
+def measure_overhead(
+    program, *, patients: int = 128, segments: int = 5, reps: int = 6
+) -> dict:
+    """Measured (not assumed) telemetry tax: the same fleet config on
+    one shared pre-warmed runner, simulated with telemetry disabled and
+    enabled in interleaved reps; min-of-reps walls on both sides (the
+    min is the noise-floor estimate — OS scheduling and GC only ever
+    add time, so more reps tighten both sides symmetrically). GC is
+    paused during the timed regions for the same reason."""
+    cfg = FleetConfig(
+        n_patients=patients,
+        segments_per_patient=segments,
+        va_fraction=0.05,
+        jitter_frac=0.02,
+        buckets=(32, 128),
+        path="twin",
+    )
+    saved = obs.get()
+    runner = FleetRunner(program, path="twin")
+    walls = {"disabled": [], "enabled": []}
+    try:
+        obs.reset()
+        simulate(cfg, runner=runner)  # untimed: compile everything
+        for _ in range(reps):
+            for mode in ("disabled", "enabled"):
+                if mode == "enabled":
+                    obs.configure(enabled=True)
+                else:
+                    obs.reset()
+                gc.disable()
+                try:
+                    t0 = time.perf_counter()
+                    simulate(cfg, runner=runner)
+                    walls[mode].append(time.perf_counter() - t0)
+                finally:
+                    gc.enable()
+    finally:
+        obs.install(saved)
+    dis = min(walls["disabled"])
+    en = min(walls["enabled"])
+    return {
+        "patients": patients,
+        "segments": segments,
+        "reps": reps,
+        "disabled_wall_s": dis,
+        "enabled_wall_s": en,
+        "overhead_ratio": en / dis,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -126,6 +187,8 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_stream.json")
     args = ap.parse_args()
 
+    # before any runner compiles, so jit cells register with the probe
+    obs.configure(enabled=True)
     params = vadetect.init(jax.random.PRNGKey(0))
     program = compiler.compile_model(params)
 
@@ -218,12 +281,23 @@ def main() -> None:
         f"dropped={realtime['dropped_total']}"
     )
 
+    overhead = measure_overhead(program)
+    print(
+        f"[stream_throughput] telemetry overhead: enabled "
+        f"{overhead['enabled_wall_s']:.3f}s vs disabled "
+        f"{overhead['disabled_wall_s']:.3f}s "
+        f"({(overhead['overhead_ratio'] - 1) * 100:+.1f}%)"
+    )
+    telemetry = obs.telemetry_section()
+    telemetry["overhead"] = overhead
+
     rec = {
         "n_host_devices": jax.device_count(),
         "chip_latency_us": program.report.latency_s * 1e6,
         "cells": cells,
         "scaling_largest_bucket": scaling,
         "realtime_1000_patients": realtime,
+        "telemetry": telemetry,
     }
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=1)
@@ -240,6 +314,23 @@ def main() -> None:
     if hi >= 8 * lo:
         assert scaling["modeled_speedup"] > 4.0, scaling
     assert realtime["realtime_factor"] >= 1.0, realtime
+    # telemetry gates: the registry's own zero-drop counter (summed
+    # over every simulate in this process), flush-latency percentiles
+    # present, the classify jit cell's recompile count visible, and the
+    # measured enabled-telemetry tax under 3% wall
+    t = telemetry
+    assert t["schema_version"] == obs.SCHEMA_VERSION and t["enabled"]
+    assert t["counters"]["stream.dropped_total"] == 0, t["counters"]
+    flush = t["histograms"]["stream.flush_wall_s"]
+    assert flush["count"] > 0 and None not in (
+        flush["p50"], flush["p99"], flush["p999"]
+    ), flush
+    assert any(
+        k.startswith("stream.classify") and v
+        for k, v in t["recompiles"].items()
+    ), t["recompiles"]
+    assert t["peak_device_memory_bytes"] > 0, t
+    assert overhead["overhead_ratio"] < 1.03, overhead
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import configs, obs
 from repro.models import api
 from repro.serve import engine as E
 from repro.serve import sharded as SH
@@ -46,9 +46,15 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--smoke", action="store_true",
                     help="small burst + assertions (CI entry point)")
+    ap.add_argument("--trace-out", default=None, metavar="PREFIX",
+                    help="enable telemetry; write PREFIX.jsonl + "
+                         "PREFIX.json (Chrome trace) on exit")
     args = ap.parse_args()
     if args.smoke:
         args.requests, args.slots, args.max_new = 4, 2, 4
+    if args.trace_out:
+        # before engine construction so jit cells register with the probe
+        obs.configure(enabled=True)
 
     cfg = configs.reduced(args.arch)
     model = api.build_model(cfg, tp=1, max_seq=96)
@@ -141,6 +147,18 @@ def main() -> None:
     assert (jnp.asarray(sampled) == jnp.asarray(again)).all()
     print(f"sampled (T=0.8, top-k=20, reproducible): "
           f"{jnp.asarray(sampled)[0].tolist()}")
+
+    if args.trace_out:
+        tel = obs.get()
+        jsonl, chrome = tel.finish(args.trace_out)
+        snap = tel.registry.snapshot()
+        # the telemetry mirrors of the engine's admission counters must
+        # agree with the engine's own accounting (satellite invariant
+        # the CI smoke asserts from the telemetry side)
+        assert snap["counters"].get("serve.admission_prefills", 0) >= \
+            eng.admission_prefills
+        print(f"trace written: {jsonl} + {chrome} "
+              f"(recompiles: {tel.probe.cache_sizes()})")
 
 
 if __name__ == "__main__":

@@ -62,8 +62,13 @@ python -m pytest -x -q ${PYTEST_ARGS+"${PYTEST_ARGS[@]}"}
 #    the f32 ring at n = 2/4/8), the gather scheme decays like 8/n,
 #    and the compressed loss curves track the f32 baseline.
 #  * serve_lm example — batched admission demo (multiple prompts seated
-#    per prefill cell) through the plain and mesh-sharded engines.
+#    per prefill cell) through the plain and mesh-sharded engines; run
+#    with --trace-out as the telemetry trace smoke: the emitted JSONL
+#    event log is validated line-by-line against the repro.obs.trace
+#    event schema and the Chrome/Perfetto export checked well-formed
+#    (python -m repro.obs.trace exits nonzero on empty/malformed).
 python benchmarks/stream_throughput.py --smoke --out /tmp/BENCH_stream_ci.json
 python benchmarks/decode_throughput.py --smoke --out /tmp/BENCH_decode_ci.json
 python benchmarks/dist_compression.py --smoke --out /tmp/BENCH_dist_ci.json
-python examples/serve_lm.py --smoke
+python examples/serve_lm.py --smoke --trace-out /tmp/ci_trace
+python -m repro.obs.trace /tmp/ci_trace.jsonl /tmp/ci_trace.json

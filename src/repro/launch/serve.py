@@ -26,7 +26,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import configs, obs
 from repro.launch.mesh import make_serving_mesh
 from repro.models import api
 from repro.serve import engine as E
@@ -69,17 +69,22 @@ def serve_lm(args) -> None:
             f"params {plan.param_bytes_per_device / 1e3:.1f} kB/device"
         )
         t0 = time.monotonic()
-        out = SH.sharded_generate(
-            model, params, prompts, mesh=mesh, max_new=args.max_new,
-            plan=plan, **sampling,
-        )
-        out.block_until_ready()
+        with obs.get().span("serve/generate", cat="serve",
+                            batch=args.batch, max_new=args.max_new,
+                            mesh=args.mesh):
+            out = SH.sharded_generate(
+                model, params, prompts, mesh=mesh, max_new=args.max_new,
+                plan=plan, **sampling,
+            )
+            out.block_until_ready()
     else:
         t0 = time.monotonic()
-        out = E.generate(
-            model, params, prompts, max_new=args.max_new, **sampling
-        )
-        out.block_until_ready()
+        with obs.get().span("serve/generate", cat="serve",
+                            batch=args.batch, max_new=args.max_new):
+            out = E.generate(
+                model, params, prompts, max_new=args.max_new, **sampling
+            )
+            out.block_until_ready()
     dt = time.monotonic() - t0
     n_tok = args.batch * args.max_new
     print(f"[serve] {cfg.name}: {out.shape} tokens in {dt:.2f}s "
@@ -129,14 +134,23 @@ def main() -> None:
                          "(data x model), e.g. --mesh 8 or --mesh 4x2")
     ap.add_argument("--patients", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PREFIX",
+                    help="enable telemetry; on exit write PREFIX.jsonl "
+                         "(event log) and PREFIX.json (Chrome/Perfetto "
+                         "trace)")
     args = ap.parse_args()
     if args.top_k and args.temperature is None:
         ap.error("--top-k only applies when sampling; pass "
                  "--temperature too (e.g. --temperature 1.0)")
+    if args.trace_out:
+        obs.configure(enabled=True)
     if args.arch == "va-cnn":
         serve_va(args)
     else:
         serve_lm(args)
+    if args.trace_out:
+        jsonl, chrome = obs.get().finish(args.trace_out)
+        print(f"[obs] trace written: {jsonl} + {chrome}")
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ import json
 
 import jax
 
+from repro import obs
 from repro.core import compiler, vadetect
 from repro.stream import FleetConfig, simulate
 
@@ -63,7 +64,15 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true",
                     help="dump the full result record as JSON")
+    ap.add_argument("--trace-out", default=None, metavar="PREFIX",
+                    help="enable telemetry; on exit write PREFIX.jsonl "
+                         "(event log) and PREFIX.json (Chrome/Perfetto "
+                         "trace)")
     args = ap.parse_args()
+    if args.trace_out:
+        # before the runner compiles so its jit cell registers with the
+        # probe
+        obs.configure(enabled=True)
 
     buckets = tuple(sorted(int(b) for b in args.buckets.split(",")))
     mesh = make_data_mesh(args.devices)
@@ -81,6 +90,10 @@ def main() -> None:
         path=args.path,
     )
     out = simulate(cfg, program, mesh=mesh)
+    if args.trace_out:
+        out["telemetry"] = obs.telemetry_section()
+        jsonl, chrome = obs.get().finish(args.trace_out)
+        print(f"[obs] trace written: {jsonl} + {chrome}")
     if args.json:
         print(json.dumps(out, indent=1, default=str))
         return

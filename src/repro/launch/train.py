@@ -35,7 +35,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import configs, obs
 from repro.data import iegm, lm
 from repro.dist import sharding as shd
 from repro.launch.mesh import make_multipod_mesh, make_smoke_mesh
@@ -141,12 +141,12 @@ def train_lm(args) -> dict:
         weight_decay=0.01,
     )
     state = trainer.init_state(params, opt)
-    step_fn = jax.jit(
+    step_fn = obs.get().probe.track("train.step", jax.jit(
         trainer.make_train_step(
             model.loss, opt, clip_norm=1.0, n_micro=args.grad_accum
         ),
         donate_argnums=(0,),
-    )
+    ))
 
     stream = lm.TokenStream(
         batch=args.batch, seq_len=args.seq, vocab=cfg.vocab, seed=args.seed
@@ -176,12 +176,12 @@ def train_va(args) -> dict:
     params = vadetect.init(key, cfg)
     opt = adamw(linear_warmup_cosine(args.lr, args.warmup, args.steps))
     state = trainer.init_state(params, opt)
-    step_fn = jax.jit(
+    step_fn = obs.get().probe.track("train.step", jax.jit(
         trainer.make_train_step(
             lambda p, b: vadetect.loss_fn(p, b, cfg), opt, clip_norm=1.0
         ),
         donate_argnums=(0,),
-    )
+    ))
     stream = iegm.IEGMStream(batch=args.batch, seed=args.seed)
     state, history = fault.run_training(
         step_fn, state, stream.batch_at,
@@ -226,7 +226,15 @@ def main() -> None:
         "--no-compress", action="store_true",
         help="f32 cross-pod reduction (ablation baseline)",
     )
+    ap.add_argument(
+        "--trace-out", default=None, metavar="PREFIX",
+        help="enable telemetry; on exit write PREFIX.jsonl (event log) "
+             "and PREFIX.json (Chrome/Perfetto trace)",
+    )
     args = ap.parse_args()
+    if args.trace_out:
+        # before any step compilation so jit cells register with the probe
+        obs.configure(enabled=True)
     if args.multi_pod:
         if args.arch == "va-cnn":
             raise SystemExit(
@@ -238,6 +246,10 @@ def main() -> None:
         train_va(args)
     else:
         train_lm(args)
+    if args.trace_out:
+        jsonl, chrome = obs.get().finish(args.trace_out)
+        print(f"[obs] trace written: {jsonl} + {chrome} "
+              f"(recompiles: {obs.get().probe.cache_sizes()})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,161 @@
+"""JAX-specific telemetry probes: recompiles, step timing, memory.
+
+Three concerns the generic registry/tracer can't see:
+
+  * **Compile/recompile visibility** — every jitted cell the serving
+    and training paths compile (decode step, per-width admission
+    prefills, stream bucket classify, multipod reduction stages) is
+    registered here by name; `cache_sizes()` reads each cell's jit
+    cache entry count (`_cache_size`), so "did anything retrace after
+    warmup" is one snapshot diff (`new_misses`). This generalizes the
+    PR 2 stream-only miss-count check to every compiled cell —
+    `tests/test_obs.py` guards both stream buckets and decode
+    admission widths with it.
+  * **Bounded step timing** — `timed_call` wraps a jitted call in
+    `block_until_ready` so the observed duration is device work, not
+    dispatch; only used when telemetry is enabled (callers pass the
+    enabled flag), so the async pipeline is never serialized silently.
+  * **Device memory gauges** — `device_memory_bytes()` prefers the
+    platform allocator's `memory_stats()["bytes_in_use"]` and falls
+    back to summing `jax.live_arrays()` (the only option on forced
+    host-platform devices); `observe_memory` folds it into live/peak
+    gauges.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro._compat import cost_analysis_dict
+
+
+def jit_cache_size(fn) -> Optional[int]:
+    """Compiled-variant count of a jitted callable (None if the
+    installed jax doesn't expose it or `fn` isn't a jit wrapper)."""
+    try:
+        return int(fn._cache_size())
+    except Exception:  # noqa: BLE001 — probe must never raise
+        return None
+
+
+class JitProbe:
+    """Named registry of jitted cells for recompile accounting.
+
+    A disabled probe drops registrations (no strong refs pinning jit
+    caches alive through a long test session); an enabled one keeps
+    them for the lifetime of the run — benchmark/launcher scale."""
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._cells: dict[str, Callable] = {}
+
+    def track(self, name: str, fn):
+        """Register `fn` under `name` (idempotent; later registrations
+        under the same name win — e.g. a rebuilt engine). Returns `fn`
+        so call sites can wrap in place."""
+        if self.enabled:
+            self._cells[name] = fn
+        return fn
+
+    def cache_sizes(self) -> dict:
+        """name -> compiled-variant count for every tracked cell (the
+        BENCH `telemetry.recompiles` section)."""
+        return {
+            name: jit_cache_size(fn)
+            for name, fn in sorted(self._cells.items())
+        }
+
+    def snapshot(self) -> dict:
+        return self.cache_sizes()
+
+    def new_misses(self, since: dict) -> dict:
+        """Cells that compiled new variants after `since` (a
+        `snapshot()`), name -> extra compile count. Empty means zero
+        recompiles — the regression-guard condition."""
+        out = {}
+        for name, n in self.cache_sizes().items():
+            before = since.get(name)
+            if n is not None and before is not None and n > before:
+                out[name] = n - before
+        return out
+
+
+class _NullProbe:
+    __slots__ = ()
+    enabled = False
+
+    def track(self, name, fn):
+        return fn
+
+    def cache_sizes(self):
+        return {}
+
+    snapshot = cache_sizes
+
+    def new_misses(self, since):
+        return {}
+
+
+NULL_PROBE = _NullProbe()
+
+
+# ---------------------------------------------------------------------------
+# timing / memory
+# ---------------------------------------------------------------------------
+
+
+def timed_call(histogram, fn, *args, **kwargs):
+    """Call `fn`, block until its result is ready, and observe the
+    bounded duration into `histogram` (a registry histogram or the
+    null one). Returns the (ready) result."""
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    histogram.observe(time.perf_counter() - t0)
+    return out
+
+
+def device_memory_bytes() -> int:
+    """Best-effort live device memory: allocator stats when the
+    platform reports them, else the sum of live jax array bytes (the
+    forced-host-device fallback; it misses internal allocator slack but
+    tracks the arrays the program actually holds)."""
+    total = 0
+    saw_stats = False
+    for d in jax.devices():
+        try:
+            stats = d.memory_stats()
+        except Exception:  # noqa: BLE001
+            stats = None
+        if stats and "bytes_in_use" in stats:
+            total += int(stats["bytes_in_use"])
+            saw_stats = True
+    if saw_stats:
+        return total
+    return int(sum(a.nbytes for a in jax.live_arrays()))
+
+
+def observe_memory(registry) -> int:
+    """Sample device memory into the live/peak gauges; returns the
+    sampled byte count. The `jax.device_bytes` gauge's `.peak` is the
+    BENCH `telemetry.peak_device_memory_bytes` value."""
+    n = device_memory_bytes()
+    registry.gauge("jax.device_bytes").set(n)
+    return n
+
+
+def cost_gauges(registry, name: str, compiled) -> dict:
+    """Fold a compiled cell's `cost_analysis` flops/bytes estimates
+    into gauges (`<name>.flops`, `<name>.bytes_accessed`); returns the
+    normalized cost dict."""
+    ca = cost_analysis_dict(compiled)
+    if "flops" in ca:
+        registry.gauge(f"{name}.flops").set(float(ca["flops"]))
+    if "bytes accessed" in ca:
+        registry.gauge(f"{name}.bytes_accessed").set(
+            float(ca["bytes accessed"])
+        )
+    return ca

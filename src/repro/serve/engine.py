@@ -28,11 +28,13 @@ dispatches on the format, so the same jitted decode_step serves both.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.models.api import Model
 from repro.models.layers import compile_linear_quant
 from repro.serve import seating
@@ -186,6 +188,11 @@ class Engine:
         # request here
         self.admission_rowsteps = 0
         self.admission_prefills = 0
+        # request latency tracking (wall): submit time per uid until the
+        # first token, then last-token time per slot for inter-token
+        # gaps — populated only when telemetry is enabled
+        self._t_submit: dict[int, float] = {}
+        self._t_last_tok: dict[int, float] = {}
 
     # -- placement / compilation hooks (identity on a single device) --------
 
@@ -199,7 +206,9 @@ class Engine:
         return x
 
     def _compile_decode(self) -> Callable:
-        return jax.jit(self.model.decode_step)
+        return obs.get().probe.track(
+            "serve.decode_step", jax.jit(self.model.decode_step)
+        )
 
     def _admission_rows(self, n: int) -> int:
         """Prefill-cell row count for `n` admitted prompts (sharded
@@ -214,9 +223,13 @@ class Engine:
         shardings so the pool cache is seated without leaving its
         placement."""
         if not hasattr(self, "_prefill_jit"):
-            self._prefill_jit = jax.jit(self.model.prefill)
-            self._seat_jit = jax.jit(
-                seating.scatter_slots, donate_argnums=0
+            probe = obs.get().probe
+            self._prefill_jit = probe.track(
+                "serve.prefill", jax.jit(self.model.prefill)
+            )
+            self._seat_jit = probe.track(
+                "serve.seat",
+                jax.jit(seating.scatter_slots, donate_argnums=0),
             )
         return self._prefill_jit, self._seat_jit, lambda p: p
 
@@ -228,7 +241,10 @@ class Engine:
             # derive the first token from (admission would crash deep
             # in the prefill cell with an opaque shape error)
             raise ValueError(f"request {req.uid}: empty prompt")
+        if obs.get().enabled:
+            self._t_submit[req.uid] = time.perf_counter()
         self._queue.append(req)
+        obs.get().registry.counter("serve.submitted_total").inc()
 
     def _admit(self) -> None:
         # admission rounds: requests finishing at admission (EOS on
@@ -251,6 +267,13 @@ class Engine:
 
     def _admit_group(self, s_len: int, pairs: list) -> None:
         """One batched prefill + scatter-seat for same-length prompts."""
+        tel = obs.get()
+        with tel.span(
+            "serve/admit", cat="serve", s_len=s_len, n=len(pairs)
+        ):
+            self._admit_group_inner(tel, s_len, pairs)
+
+    def _admit_group_inner(self, tel, s_len: int, pairs: list) -> None:
         reqs = [r for _, r in pairs]
         n = len(reqs)
         rows = self._admission_rows(n)
@@ -264,8 +287,11 @@ class Engine:
             )
         prefill, seat, place = self._admission_cell(rows)
         logits, cache_rows = prefill(self.params, place(prompts))
+        tel.block(logits)
         self.admission_rowsteps += rows * s_len
         self.admission_prefills += 1
+        tel.registry.counter("serve.admission_rowsteps").add(rows * s_len)
+        tel.registry.counter("serve.admission_prefills").inc()
         # the first generated token comes from the prefill's final
         # logits — the same source `generate` uses, which is what makes
         # the two paths token-identical
@@ -285,6 +311,14 @@ class Engine:
         for j, (slot, req) in enumerate(pairs):
             first = int(firsts[j])
             req.output.append(first)
+            if tel.enabled:
+                t_now = time.perf_counter()
+                t0 = self._t_submit.pop(req.uid, None)
+                if t0 is not None:
+                    tel.registry.histogram("serve.ttft_s").observe(
+                        t_now - t0
+                    )
+                self._t_last_tok[slot] = t_now
             if (
                 req.eos is not None and first == req.eos
             ) or len(req.output) >= req.max_new:
@@ -294,6 +328,7 @@ class Engine:
                 # tick they were admitted.
                 req.done = True
                 self.active = self.active.at[slot].set(False)
+                self._t_last_tok.pop(slot, None)
                 continue
             src.append(j)
             dst.append(slot)
@@ -328,6 +363,13 @@ class Engine:
 
     def tick(self) -> int:
         """One decode tick for the whole pool; returns #active slots."""
+        tel = obs.get()
+        with tel.span("serve/tick", cat="serve"):
+            n_active = self._tick_inner(tel)
+        tel.registry.gauge("serve.active_slots").set(n_active)
+        return n_active
+
+    def _tick_inner(self, tel) -> int:
         self._admit()
         if not any(r is not None for r in self._slots):
             return 0
@@ -364,12 +406,23 @@ class Engine:
                 continue
             tok = int(nxt[slot])
             req.output.append(tok)
+            if tel.enabled:
+                t_now = time.perf_counter()
+                t_prev = self._t_last_tok.get(slot)
+                if t_prev is not None:
+                    tel.registry.histogram(
+                        "serve.inter_token_s"
+                    ).observe(t_now - t_prev)
+                self._t_last_tok[slot] = t_now
+            tel.registry.counter("serve.tokens_total").inc()
             if (req.eos is not None and tok == req.eos) or len(
                 req.output
             ) >= req.max_new:
                 req.done = True
                 self._slots[slot] = None
                 self.active = self.active.at[slot].set(False)
+                self._t_last_tok.pop(slot, None)
+                tel.registry.counter("serve.completed_total").inc()
             else:
                 n_active += 1
         return n_active

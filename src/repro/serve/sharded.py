@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.dist import sharding as shd
 from repro.models.api import Model
 from repro.serve import seating
@@ -287,6 +288,7 @@ class ShardedEngine(Engine):
     def _compile_decode(self) -> Callable:
         plan = self.plan
         _, decode = compile_decode(self.model, plan)
+        decode = obs.get().probe.track("serve.decode_step", decode)
 
         def step(params, cache, tok, pos):
             return decode(
@@ -309,16 +311,25 @@ class ShardedEngine(Engine):
                 self.model, self.params, self.mesh, batch_size=rows,
                 strict=self._strict,
             )
-            prefill = jax.jit(
-                self.model.prefill,
-                in_shardings=(self.plan.params, rplan.prompts),
-                out_shardings=(rplan.logits, rplan.cache),
+            probe = obs.get().probe
+            prefill = probe.track(
+                f"serve.prefill.w{rows}",
+                jax.jit(
+                    self.model.prefill,
+                    in_shardings=(self.plan.params, rplan.prompts),
+                    out_shardings=(rplan.logits, rplan.cache),
+                ),
             )
-            seat = jax.jit(
-                seating.scatter_slots,
-                in_shardings=(self.plan.cache, rplan.cache, None, None),
-                out_shardings=self.plan.cache,
-                donate_argnums=0,
+            seat = probe.track(
+                f"serve.seat.w{rows}",
+                jax.jit(
+                    seating.scatter_slots,
+                    in_shardings=(
+                        self.plan.cache, rplan.cache, None, None
+                    ),
+                    out_shardings=self.plan.cache,
+                    donate_argnums=0,
+                ),
             )
             place = lambda p: jax.device_put(
                 jnp.asarray(p, jnp.int32), rplan.prompts

@@ -21,11 +21,13 @@ implants.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import compiler, vadetect
 from repro.stream import vote as V
 from repro.stream.metrics import FleetMetrics
@@ -146,6 +148,8 @@ def simulate(
             jnp.zeros((b,), bool),
         )
     metrics.start_clock()
+    tel = obs.get()
+    flush_hist = tel.registry.histogram("stream.flush_wall_s")
 
     chip_s_per_patient = np.zeros(cfg.n_patients)
     final_diag = np.full(cfg.n_patients, -1, np.int64)
@@ -177,20 +181,31 @@ def simulate(
         batch = sched.next_batch(now)
         if batch is None:
             continue
-        sigs = (
-            bank.gather(batch.patients, batch.seqs)
-            if bank is not None
-            else np.asarray(
-                source.signals(batch.patients, batch.seqs)["signal"]
+        t_flush = time.perf_counter()
+        with tel.span(
+            "stream/flush", cat="stream",
+            bucket=batch.bucket, n_valid=batch.n_valid,
+            v_ts_s=now,
+            v_dur_s=runner.batch_service_s(batch.bucket),
+        ):
+            sigs = (
+                bank.gather(batch.patients, batch.seqs)
+                if bank is not None
+                else np.asarray(
+                    source.signals(batch.patients, batch.seqs)["signal"]
+                )
             )
-        )
-        preds = runner.classify(jnp.asarray(sigs))
-        vstate, emit, diag, urgent = V.update(
-            vstate,
-            jnp.asarray(batch.patients),
-            preds,
-            jnp.asarray(batch.valid),
-        )
+            with tel.span(
+                "stream/classify", cat="stream", bucket=batch.bucket
+            ):
+                preds = tel.block(runner.classify(jnp.asarray(sigs)))
+            vstate, emit, diag, urgent = V.update(
+                vstate,
+                jnp.asarray(batch.patients),
+                preds,
+                jnp.asarray(batch.valid),
+            )
+        flush_hist.observe(time.perf_counter() - t_flush)
         sched.set_urgent(np.asarray(urgent))
 
         service = runner.batch_service_s(batch.bucket)
@@ -231,6 +246,7 @@ def simulate(
     metrics.stop_clock()
 
     metrics.dropped_total = sched.enqueued_total - sched.packed_total
+    tel.registry.counter("stream.dropped_total").add(metrics.dropped_total)
     labels = np.asarray(source.labels(np.arange(cfg.n_patients)))
     diagnosed = final_diag >= 0
     acc = (

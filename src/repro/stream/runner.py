@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from repro import obs
 from repro.core import compiler, sparsity, vadetect
 from repro.dist import sharding as shd
 
@@ -120,8 +121,13 @@ class FleetRunner:
             logits_fn = lambda x: compiler.execute(
                 program, x, cfg, path=path
             )
-        self._infer = jax.jit(
-            lambda x: jnp.argmax(logits_fn(x), axis=-1).astype(jnp.int32)
+        self._infer = obs.get().probe.track(
+            f"stream.classify.{path}",
+            jax.jit(
+                lambda x: jnp.argmax(logits_fn(x), axis=-1).astype(
+                    jnp.int32
+                )
+            ),
         )
         if mesh is not None:
             spec = shd.batch_specs(

@@ -32,6 +32,7 @@ import itertools
 
 import numpy as np
 
+from repro import obs
 from repro.stream.sources import SEGMENT_PERIOD_S, SegmentRef
 from repro.stream.vote import VOTE_SEGMENTS
 
@@ -95,6 +96,7 @@ class MicroBatchScheduler:
     def enqueue(self, ref: SegmentRef) -> None:
         self._queue.append((next(self._tie), ref))
         self.enqueued_total += 1
+        obs.get().registry.counter("stream.enqueued_total").inc()
 
     def extend(self, refs) -> None:
         for r in refs:
@@ -170,6 +172,17 @@ class MicroBatchScheduler:
         still never dropped, excess rows stay queued."""
         if not self._queue:
             return None
+        tel = obs.get()
+        with tel.span(
+            "stream/pack", cat="stream",
+            queue_depth=len(self._queue), v_ts_s=now_s,
+        ):
+            batch = self._pack(now_s)
+        tel.registry.counter("stream.packed_total").inc(batch.n_valid)
+        tel.registry.gauge("stream.queue_depth").set(len(self._queue))
+        return batch
+
+    def _pack(self, now_s: float) -> PackedBatch:
         urgent, routine = [], []
         for entry in self._queue:
             (urgent if self.is_urgent(entry[1].patient)

@@ -22,6 +22,8 @@ import statistics
 import time
 from typing import Any, Callable, Optional
 
+from repro import obs
+
 logger = logging.getLogger("repro.fault")
 
 
@@ -111,16 +113,20 @@ def run_training(
 
     history: list[dict] = []
     retries = 0
+    tel = obs.get()
+    step_hist = tel.registry.histogram("train.step_latency_s")
     while step < num_steps:
         t0 = time.monotonic()
         try:
             if fault_hook is not None:
                 fault_hook(step)
             batch = batch_at(step)
-            state, metrics = train_step(state, batch)
-            jax.block_until_ready(metrics)
+            with tel.span("train/step", cat="train", step=step):
+                state, metrics = train_step(state, batch)
+                jax.block_until_ready(metrics)
         except Exception as e:  # noqa: BLE001 — the recovery path
             retries += 1
+            tel.registry.counter("train.retries_total").inc()
             logger.warning("step %d failed (%s); retry %d/%d",
                            step, e, retries, max_retries)
             if retries > max_retries:
@@ -135,6 +141,8 @@ def run_training(
             continue
         retries = 0
         dt = time.monotonic() - t0
+        step_hist.observe(dt)
+        tel.registry.counter("train.steps_total").inc()
         if watchdog is not None:
             watchdog.record(step, dt)
         m = {k: float(v) for k, v in metrics.items()}

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.dist import sharding as shd
 from repro.dist.accumulate import accumulate_grads
 from repro.optim import clip_by_global_norm
@@ -121,11 +122,14 @@ def make_sharded_train_step(
     b_specs = shd.batch_specs(batch_shapes, cfg, mesh)
     s_shard = shd.named(s_specs, mesh)
     b_shard = shd.named(b_specs, mesh)
-    jitted = jax.jit(
-        step,
-        in_shardings=(s_shard, b_shard),
-        out_shardings=(s_shard, None),
-        donate_argnums=(0,) if donate else (),
+    jitted = obs.get().probe.track(
+        "train.step",
+        jax.jit(
+            step,
+            in_shardings=(s_shard, b_shard),
+            out_shardings=(s_shard, None),
+            donate_argnums=(0,) if donate else (),
+        ),
     )
     return jitted, s_shard, b_shard
 
@@ -178,7 +182,11 @@ def init_dp_err(
             ),
             params,
         )
-    return err
+    # Seat the buffers with the steady-state sharding the step emits
+    # (leading pod dim split over `axis`): uncommitted zeros would make
+    # the step's second call retrace — one silent extra compile of the
+    # full train step that the per-cell recompile telemetry flags.
+    return jax.device_put(err, NamedSharding(mesh, P(axis)))
 
 
 def _reduce_grads(grads, err, axis, *, compress, scheme):
@@ -378,17 +386,20 @@ def make_multipod_train_step(
 
     g_spec = jax.tree.map(lambda _: P("pod"), state_shapes["params"])
     mean_spec = jax.tree.map(lambda _: P(), state_shapes["params"])
-    step_b = jax.jit(
-        shard_map(
-            reduce_body,
-            mesh=mesh,
-            in_specs=(g_spec, err_spec),
-            out_specs=(mean_spec, err_spec),
-            check_rep=False,
+    step_b = obs.get().probe.track(
+        "train.multipod.step_b",
+        jax.jit(
+            shard_map(
+                reduce_body,
+                mesh=mesh,
+                in_specs=(g_spec, err_spec),
+                out_specs=(mean_spec, err_spec),
+                check_rep=False,
+            ),
+            in_shardings=(g_shard, err_shard),
+            out_shardings=(shd.named(mean_spec, mesh), err_shard),
+            donate_argnums=(1,) if donate else (),
         ),
-        in_shardings=(g_shard, err_shard),
-        out_shardings=(shd.named(mean_spec, mesh), err_shard),
-        donate_argnums=(1,) if donate else (),
     )
 
     # ---- stage C: optimizer update (pjit, ZeRO-1 shardings) ----
@@ -408,17 +419,21 @@ def make_multipod_train_step(
             "step": core["step"] + 1,
         }, gnorm
 
-    step_c = jax.jit(
-        update_core,
-        in_shardings=(core_shard, shd.named(mean_spec, mesh)),
-        out_shardings=(core_shard, None),
-        donate_argnums=(0,) if donate else (),
+    step_c = obs.get().probe.track(
+        "train.multipod.step_c",
+        jax.jit(
+            update_core,
+            in_shardings=(core_shard, shd.named(mean_spec, mesh)),
+            out_shardings=(core_shard, None),
+            donate_argnums=(0,) if donate else (),
+        ),
     )
 
     step_a = None  # compiled lazily: in_shardings depend on batch shapes
 
     def py_step(state: dict, batch: Any) -> tuple[dict, dict]:
         nonlocal step_a
+        tel = obs.get()
         leading = jax.tree.leaves(batch)[0].shape[0]
         if leading % n_pod:
             raise ValueError(
@@ -429,15 +444,21 @@ def make_multipod_train_step(
             lambda x: x.reshape((n_pod, -1) + x.shape[1:]), batch
         )
         if step_a is None:
-            step_a = jax.jit(
-                jax.vmap(grad_one, in_axes=(None, 0)),
-                in_shardings=(p_shard, pod_batch_shard(pb)),
-                out_shardings=(g_shard, None),
+            step_a = tel.probe.track(
+                "train.multipod.step_a",
+                jax.jit(
+                    jax.vmap(grad_one, in_axes=(None, 0)),
+                    in_shardings=(p_shard, pod_batch_shard(pb)),
+                    out_shardings=(g_shard, None),
+                ),
             )
-        grads, metrics = step_a(state["params"], pb)
-        mean_g, new_err = step_b(grads, state["err"])
+        with tel.span("train/grads", cat="train"):
+            grads, metrics = tel.block(step_a(state["params"], pb))
+        with tel.span("train/reduce", cat="train"):
+            mean_g, new_err = tel.block(step_b(grads, state["err"]))
         core = {k: state[k] for k in ("params", "opt", "step")}
-        new_core, gnorm = step_c(core, mean_g)
+        with tel.span("train/update", cat="train"):
+            new_core, gnorm = step_c(core, mean_g)
         metrics = {k: jnp.mean(v) for k, v in metrics.items()}
         metrics["grad_norm"] = gnorm
         return {**new_core, "err": new_err}, metrics

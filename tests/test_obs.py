@@ -1,0 +1,295 @@
+"""repro.obs: registry/histogram properties, tracer round-trip, jit
+recompile guards, and the disabled-no-op / enabled-overhead contracts.
+
+The histogram merge property and the two recompile regression guards
+are the ISSUE-mandated satellites: merging per-shard histograms must be
+bucket-exact vs the histogram of the concatenated samples, and the
+stream classify cells / decode-engine admission cells must show zero
+jit cache misses after warmup (the probe's `new_misses` diff).
+"""
+
+import gc
+import json
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import configs, obs
+from repro.core import compiler, vadetect
+from repro.models import api
+from repro.obs.registry import PER_DECADE, Histogram
+from repro.serve import engine as E
+from repro.stream import FleetConfig, FleetRunner, simulate
+
+
+@pytest.fixture(autouse=True)
+def _reset_obs():
+    """Every test leaves the process-wide telemetry at the disabled
+    default — an enabled registry leaking across tests would skew the
+    no-op timing assertions and pin jit caches."""
+    yield
+    obs.reset()
+
+
+@pytest.fixture(scope="module")
+def program():
+    params = vadetect.init(jax.random.PRNGKey(0))
+    return compiler.compile_model(params)
+
+
+# ---------------------------------------------------------------------------
+# histogram: merge property + quantile error bound
+# ---------------------------------------------------------------------------
+
+# one log-spaced bucket spans a ratio of r; the rank-interpolated
+# quantile can land anywhere in the bucket holding the rank, and the
+# empirical quantile convention can differ by at most one more bucket
+_R = 10.0 ** (1.0 / PER_DECADE)
+_QUANTILE_RATIO = _R**2
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_shards=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+    log_scale=st.floats(min_value=-5.0, max_value=2.0),
+    spread=st.floats(min_value=0.1, max_value=2.5),
+)
+def test_histogram_merge_is_bucket_exact(n_shards, seed, log_scale,
+                                         spread):
+    """Merging per-shard histograms == histogram of the concatenated
+    samples, bit-exact in every bucket; the merged quantile is within
+    one bucket ratio of the exact sorted-sample quantile."""
+    rng = np.random.RandomState(seed)
+    shards = [
+        rng.lognormal(mean=log_scale * math.log(10.0), sigma=spread,
+                      size=rng.randint(1, 400))
+        for _ in range(n_shards)
+    ]
+    all_samples = np.concatenate(shards)
+
+    per_shard = []
+    for s in shards:
+        h = Histogram("t", "latency")
+        h.observe_array(s)
+        per_shard.append(h)
+    merged = Histogram.merged(per_shard)
+
+    whole = Histogram("t", "latency")
+    whole.observe_array(all_samples)
+
+    # bucket-exact: same counts array, same exact count/sum/min/max
+    np.testing.assert_array_equal(merged.counts, whole.counts)
+    assert merged.count == whole.count == all_samples.size
+    assert merged.sum == pytest.approx(whole.sum)
+    assert merged.min == whole.min and merged.max == whole.max
+
+    # quantile error bounded by the (log-spaced) bucket width
+    srt = np.sort(all_samples)
+    for q in (0.5, 0.9, 0.99):
+        exact = float(srt[min(int(math.ceil(q * srt.size)) - 1,
+                              srt.size - 1)])
+        est = merged.quantile(q)
+        assert est == whole.quantile(q)  # merge preserves quantiles
+        if exact > 0:
+            assert exact / _QUANTILE_RATIO <= est <= \
+                exact * _QUANTILE_RATIO, (q, est, exact)
+
+
+def test_histogram_merge_rejects_layout_mismatch():
+    with pytest.raises(ValueError, match="layout mismatch"):
+        Histogram("a", "latency").merge(Histogram("b", "signed"))
+
+
+def test_signed_histogram_exact_zero_split():
+    """The signed layout keeps 0 an explicit edge so deadline-slack
+    violations (samples <= 0) are counted exactly, not re-bucketed."""
+    rng = np.random.RandomState(7)
+    xs = np.concatenate([
+        rng.uniform(-5e-3, 5e-3, size=500),
+        np.zeros(17),  # exactly-on-time segments land at the 0 edge
+    ])
+    h = Histogram("slack", "signed")
+    h.observe_array(xs)
+    assert h.count_at_or_below(0.0) == int((xs <= 0).sum())
+    assert h.min == xs.min() and h.max == xs.max()
+
+
+# ---------------------------------------------------------------------------
+# tracer: JSONL + Chrome round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_trace_roundtrip_and_virtual_track(tmp_path):
+    tel = obs.configure(enabled=True)
+    with tel.span("stream/flush", cat="stream", bucket=32,
+                  v_ts_s=1.5, v_dur_s=0.25):
+        with tel.span("stream/classify", cat="stream"):
+            pass
+    tel.tracer.instant("fleet/start", cat="stream", patients=4)
+    tel.tracer.counter("queue_depth", 3.0, cat="stream")
+
+    jsonl, chrome = tel.finish(str(tmp_path / "t"))
+    assert obs.validate_jsonl(jsonl) == 4
+    # 4 events + 2 process-name metadata + 1 virtual-time mirror
+    assert obs.validate_chrome(chrome) == 7
+
+    doc = json.load(open(chrome))
+    virt = [e for e in doc["traceEvents"]
+            if e.get("pid") == 1 and e.get("ph") == "X"]
+    assert len(virt) == 1
+    assert virt[0]["ts"] == pytest.approx(1.5e6)
+    assert virt[0]["dur"] == pytest.approx(0.25e6)
+
+
+def test_validate_event_rejects_malformed():
+    ok = {"type": "span", "name": "x", "cat": "c", "ts_us": 1.0,
+          "dur_us": 2.0, "tid": 3, "attrs": {}}
+    obs.validate_event(ok)
+    for bad in (
+        {**ok, "type": "nope"},
+        {**ok, "ts_us": -1.0},
+        {k: v for k, v in ok.items() if k != "attrs"},
+    ):
+        with pytest.raises(ValueError):
+            obs.validate_event(bad)
+
+
+def test_telemetry_section_schema():
+    tel = obs.configure(enabled=True)
+    tel.registry.counter("x.total").inc(3)
+    tel.registry.gauge("x.depth").set(2.0)
+    tel.registry.histogram("x.lat_s").observe(1e-3)
+    tel.probe.track("x.cell", jax.jit(lambda v: v + 1))
+    keep = jnp.ones((8,))  # a live array so the memory gauge is > 0
+
+    sec = obs.telemetry_section()
+    assert sec["schema_version"] == obs.SCHEMA_VERSION and sec["enabled"]
+    assert sec["counters"]["x.total"] == 3
+    assert sec["gauges"]["x.depth"]["value"] == 2.0
+    h = sec["histograms"]["x.lat_s"]
+    assert h["count"] == 1 and h["p50"] is not None
+    assert "x.cell" in sec["recompiles"]
+    assert sec["peak_device_memory_bytes"] >= keep.nbytes
+
+
+# ---------------------------------------------------------------------------
+# jit recompile regression guards (generalized via obs.jaxprobe)
+# ---------------------------------------------------------------------------
+
+
+def test_recompile_guard_stream_buckets(program):
+    """Stream classify over the declared buckets: after one warmup pass
+    per bucket, further traffic causes zero jit cache misses."""
+    obs.configure(enabled=True)
+    buckets = (8, 16)
+    runner = FleetRunner(program, path="twin")
+    for b in buckets:
+        runner.classify(jnp.zeros((b, vadetect.RECORD_LEN)))
+
+    probe = obs.get().probe
+    snap = probe.snapshot()
+    assert snap.get("stream.classify.twin") == len(buckets)
+    for _ in range(3):
+        for b in buckets:
+            runner.classify(jnp.zeros((b, vadetect.RECORD_LEN)))
+    assert probe.new_misses(snap) == {}
+
+
+def test_recompile_guard_decode_admission_widths():
+    """Decode engine over its admission widths: after one warmup round
+    covering each (group rows, prompt len) shape, re-serving the same
+    shapes causes zero cache misses in the decode step, the prefill
+    cell, or the seating cell."""
+    obs.configure(enabled=True)
+    cfg = configs.reduced("qwen3_8b")
+    model = api.build_model(cfg, tp=1, max_seq=48)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = E.Engine(model, params, batch_size=2)
+
+    def serve_round(uid0):
+        # two widths: a 2-row group (len 5) then a 1-row group (len 9)
+        for uid, n_tok in ((uid0, 5), (uid0 + 1, 5), (uid0 + 2, 9)):
+            eng.submit(E.Request(
+                uid=uid,
+                prompt=jax.random.randint(
+                    jax.random.PRNGKey(uid), (n_tok,), 0, cfg.vocab),
+                max_new=3,
+            ))
+        eng.run(max_ticks=40)
+
+    serve_round(0)  # warmup: compiles decode + admission cells
+    probe = obs.get().probe
+    snap = probe.snapshot()
+    for cell in ("serve.decode_step", "serve.prefill", "serve.seat"):
+        assert snap.get(cell), (cell, snap)
+    serve_round(10)
+    assert probe.new_misses(snap) == {}
+
+
+# ---------------------------------------------------------------------------
+# disabled no-op + enabled overhead contracts
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_telemetry_is_noop():
+    """The disabled default costs nanoseconds per emission — hot paths
+    emit unconditionally, so this bound is what makes that free."""
+    obs.reset()
+    tel = obs.get()
+    assert not tel.enabled
+    # null instruments are shared singletons, nothing accumulates
+    assert tel.registry.counter("a") is tel.registry.counter("b")
+    assert tel.registry.snapshot() == {
+        "counters": {}, "gauges": {}, "histograms": {}
+    }
+
+    n = 20_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        tel.registry.counter("stream.enqueued_total").inc()
+        tel.registry.histogram("serve.ttft_s").observe(1e-3)
+        with tel.span("serve/tick", cat="serve"):
+            pass
+    per_emission_ns = (time.perf_counter() - t0) / (3 * n) * 1e9
+    # ~200-450 ns each measured; 2 us leaves CI-noise headroom while
+    # still catching an accidental allocation/lock on the no-op path
+    assert per_emission_ns < 2_000, per_emission_ns
+
+
+def test_enabled_overhead_under_three_percent(program):
+    """Enabled telemetry stays under the 3% wall budget on the stream
+    fleet loop — measured on a pre-warmed runner with interleaved
+    disabled/enabled reps (min-of-N), the same protocol
+    `benchmarks/stream_throughput.py` records in its BENCH telemetry
+    `overhead` sub-record."""
+    cfg = FleetConfig(
+        n_patients=128, segments_per_patient=5, va_fraction=0.05,
+        jitter_frac=0.02, buckets=(16, 64), path="twin",
+    )
+    runner = FleetRunner(program, path="twin")
+    simulate(cfg, runner=runner)  # untimed: compile both bucket cells
+    walls = {"disabled": [], "enabled": []}
+    for _ in range(6):
+        for mode in ("disabled", "enabled"):
+            if mode == "enabled":
+                obs.configure(enabled=True)
+            else:
+                obs.reset()
+            gc.disable()
+            try:
+                t0 = time.perf_counter()
+                simulate(cfg, runner=runner)
+                walls[mode].append(time.perf_counter() - t0)
+            finally:
+                gc.enable()
+    # min-of-reps on both sides: noise (OS scheduling, GC) only ever
+    # adds time, so the mins are the comparable noise floors
+    ratio = min(walls["enabled"]) / min(walls["disabled"])
+    assert ratio < 1.03, (ratio, walls)
