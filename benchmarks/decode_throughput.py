@@ -216,6 +216,9 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--out", default="BENCH_decode.json")
+    ap.add_argument("--trace-out", default=None, metavar="PREFIX",
+                    help="write the telemetry trace to PREFIX.jsonl "
+                         "(event log) + PREFIX.json (Chrome/Perfetto)")
     args = ap.parse_args()
 
     # before any engine compiles, so jit cells register with the probe
@@ -292,6 +295,9 @@ def main() -> None:
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=1)
     print(f"[decode_throughput] -> {args.out}")
+    if args.trace_out:
+        jsonl, chrome = obs.get().finish(args.trace_out)
+        print(f"[obs] trace written: {jsonl} + {chrome}")
 
     # acceptance: every multi-device placement keeps per-device cache
     # bytes strictly below the replicated baseline, and the modeled

@@ -296,7 +296,8 @@ def check(rec: dict) -> None:
     assert t["peak_device_memory_bytes"] > 0, t
 
 
-def run(arch: str, out_path: str, *, steps: int) -> dict:
+def run(arch: str, out_path: str, *, steps: int,
+        trace_out: str | None = None) -> dict:
     n_dev = jax.device_count()
     pod_counts = [n for n in (2, 4, 8) if n <= n_dev]
     if not pod_counts:
@@ -324,6 +325,9 @@ def run(arch: str, out_path: str, *, steps: int) -> dict:
     with open(out_path, "w") as f:
         json.dump(rec, f, indent=1)
     print(f"[dist_compression] all gates passed -> {out_path}")
+    if trace_out:
+        jsonl, chrome = obs.get().finish(trace_out)
+        print(f"[obs] trace written: {jsonl} + {chrome}")
     return rec
 
 
@@ -333,8 +337,12 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_dist.json")
     ap.add_argument("--smoke", action="store_true",
                     help="fewer convergence steps (CI)")
+    ap.add_argument("--trace-out", default=None, metavar="PREFIX",
+                    help="write the telemetry trace to PREFIX.jsonl "
+                         "(event log) + PREFIX.json (Chrome/Perfetto)")
     args = ap.parse_args()
-    run(args.arch, args.out, steps=24 if args.smoke else 60)
+    run(args.arch, args.out, steps=24 if args.smoke else 60,
+        trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

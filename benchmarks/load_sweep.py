@@ -1,0 +1,285 @@
+"""Open-loop load lab: tail-latency-vs-offered-load, knees, SLO burn.
+
+Drives both request paths through `repro.obs.loadlab` sweeps:
+
+  * **serve** (wall time) — the slot engine on a reduced LM config.
+    Capacity is measured first (closed-loop: every request intended at
+    t≈0, achieved rate = n / drain time), then the open-loop sweep
+    offers 0.25x..6-8x that rate (deep past nominal, since the
+    wall-clock capacity estimate is noisy) with Poisson arrivals and
+    measures TTFT
+    and end-to-end latency **from intended arrival times** generated up
+    front on fold_in-derived keys — coordinated omission is
+    structurally impossible, and the record self-asserts the guard
+    (intended-based >= submit-based, strictly greater at overload).
+  * **stream** (virtual time) — the fleet scheduler + modeled chip
+    batches under per-patient Poisson segment arrivals at 0.25x..3x
+    the modeled capacity, exactly reproducible on any host. A
+    pinned URGENT cohort checks class survival: preemption must keep
+    its p99.9 deadline slack non-negative through 3x overload.
+
+Both sweeps locate the saturation knee (last point whose p99 stays
+within 3x the fastest point's) and evaluate declared SLOs with
+error-budget burn rates. A lineage pass then joins every traced
+request's spans by request id across its subsystem hops
+(serve: submit → admit → prefill/seat → decode → finish; stream:
+enqueue → pack → flush → classify/vote) and samples per-request
+critical paths for the report waterfall.
+
+The record is `BENCH_load.json` (shared `telemetry` schema section,
+like every other BENCH); render the standalone HTML report with
+
+    python -m repro.obs.loadlab BENCH_load.json -o load_report.html
+
+    PYTHONPATH=src python benchmarks/load_sweep.py [--smoke]
+"""
+
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""
+):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + os.environ.get("XLA_FLAGS", "")
+    ).strip()
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs, obs
+from repro.core import compiler, vadetect
+from repro.models import api
+from repro.obs import lineage, loadlab
+from repro.serve.engine import Engine, Request
+from repro.stream.fleet import FleetConfig, simulate
+from repro.stream.runner import FleetRunner
+
+ARCH = "qwen3_8b"
+POOL = 4
+PROMPT_LEN = 6
+
+
+def build_serve(max_new: int):
+    """(make_engine, make_prompts) closures over one built model —
+    every sweep point gets a fresh engine (fresh slots/queue) but the
+    params and jit caches are shared, so per-point warmup is cheap."""
+    cfg = configs.reduced(ARCH)
+    model = api.build_model(cfg, tp=1, max_seq=PROMPT_LEN + max_new + 2)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def make_engine():
+        return Engine(model, params, batch_size=POOL)
+
+    def make_prompts(n: int):
+        toks = jax.random.randint(
+            jax.random.PRNGKey(7), (n, PROMPT_LEN), 0, cfg.vocab
+        )
+        return [jnp.asarray(toks[i], jnp.int32) for i in range(n)]
+
+    return make_engine, make_prompts
+
+
+def measure_serve_capacity(make_engine, make_prompts, *, n: int,
+                           max_new: int) -> float:
+    """Closed-loop anchor: intend every request at ~t=0 (a very high
+    offered rate), so the achieved rate is the drain throughput."""
+    pt = loadlab.run_serve_point(
+        make_engine,
+        make_prompts(n),
+        rate_rps=1e5,
+        max_new=max_new,
+        key=jax.random.PRNGKey(99),
+    )
+    return float(pt["achieved_rps"])
+
+
+def lineage_sample(runner, make_engine, make_prompts, *, max_new: int,
+                   n_samples: int = 8) -> dict:
+    """One traced run per engine, joined into per-request lineages.
+    Kept separate from the sweeps (fresh tracer) so the join covers a
+    bounded, fully-drained set of requests."""
+    saved = obs.get()
+    tel = obs.configure(enabled=True)
+    try:
+        # serve: enough requests to exercise queueing behind the pool
+        eng = make_engine()
+        for i, p in enumerate(make_prompts(POOL + 2)):
+            eng.submit(Request(uid=i, prompt=p, max_new=max_new))
+        eng.run(max_ticks=200)
+        # stream: a small fleet, default periodic arrivals
+        cfg = FleetConfig(
+            n_patients=8, segments_per_patient=2, seed=0,
+            buckets=(8,), va_fraction=0.0,
+        )
+        simulate(cfg, runner=runner)
+        events = tel.tracer.events()
+    finally:
+        obs.install(saved)
+
+    out = {}
+    for name, prefix, min_hops in (
+        ("serve", "serve:", 3), ("stream", "stream:", 3),
+    ):
+        joined = lineage.assert_joined(
+            events, min_hops=min_hops, expect_prefix=prefix
+        )
+        mine = {r: h for r, h in joined.items() if r.startswith(prefix)}
+        summ = lineage.summarize(
+            [e for e in events
+             if any(r.startswith(prefix) for r in lineage._event_rids(e))]
+        )
+        samples = []
+        for rid in sorted(mine)[:n_samples]:
+            cp = lineage.critical_path(mine[rid])
+            cp["request_id"] = rid
+            samples.append(cp)
+        out[name] = {**summ, "min_hops_required": min_hops,
+                     "samples": samples}
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grid for CI")
+    ap.add_argument("--out", default="BENCH_load.json")
+    ap.add_argument("--report", default=None, metavar="HTML",
+                    help="also render the standalone HTML report here")
+    ap.add_argument("--trace-out", default=None, metavar="PREFIX",
+                    help="write the lineage-pass trace to PREFIX.jsonl "
+                         "+ PREFIX.json (Chrome/Perfetto)")
+    args = ap.parse_args()
+
+    # enabled from the start so every jit cell registers with the
+    # probe and the sweeps' spans land in the telemetry section
+    obs.configure(enabled=True)
+
+    # serve sweeps push much deeper past nominal capacity than stream:
+    # the serve capacity estimate is a *wall-clock* closed-loop drain
+    # measurement, so on a noisy box it can come in 2-3x below the
+    # true sustainable rate — a 3x top fraction then never actually
+    # saturates the engine and no knee appears (seen in CI). The 6-8x
+    # ceiling guarantees decisive saturation even through a 2-3x
+    # capacity misestimate. Stream capacity is derived from the
+    # *virtual-time* service model (deterministic), so 3x suffices.
+    if args.smoke:
+        serve_fractions = (0.25, 0.5, 1.0, 2.0, 4.0, 8.0)
+        stream_fractions = (0.25, 0.5, 0.75, 1.0, 2.0, 3.0)
+        # n_requests is NOT shrunk for the smoke: with n requests the
+        # worst open-loop queueing delay is bounded by ~(n-1)/capacity,
+        # and the knee bound is 3x the *minimum* observed p99 — a noise
+        # burst that inflates the quietest point by 2x can push the
+        # bound past what n=16 requests can physically queue up,
+        # leaving the knee undetectable (seen in CI). n=32 keeps the
+        # saturated tail decisively above any noise-inflated bound.
+        n_requests, max_new = 32, 8
+        n_patients, segments_at_capacity = 16, 384
+    else:
+        serve_fractions = (0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 3.0, 6.0)
+        stream_fractions = (0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 3.0)
+        n_requests, max_new = 32, 8
+        n_patients, segments_at_capacity = 64, 2048
+
+    make_engine, make_prompts = build_serve(max_new)
+    capacity = measure_serve_capacity(
+        make_engine, make_prompts, n=max(2 * POOL, 8), max_new=max_new
+    )
+    print(f"[load_sweep] serve closed-loop capacity ~{capacity:.0f} "
+          f"req/s (pool={POOL}, prompt={PROMPT_LEN}, "
+          f"max_new={max_new})")
+
+    serve = loadlab.sweep_serve(
+        make_engine,
+        make_prompts,
+        capacity_rps=capacity,
+        load_fractions=serve_fractions,
+        n_requests=n_requests,
+        max_new=max_new,
+    )
+    print(f"[load_sweep] serve: knee@"
+          f"{serve['knee'].get('knee_rate', float('nan')):.0f} req/s "
+          f"(growth {serve['knee'].get('post_knee_growth', 0):.1f}x), "
+          f"slo_sub_saturated={serve['slo']['met_sub_saturated']}, "
+          f"verdict={serve['overload']['verdict']}")
+
+    runner = FleetRunner(
+        compiler.compile_model(vadetect.init(jax.random.PRNGKey(0)))
+    )
+    stream = loadlab.sweep_stream(
+        n_patients=n_patients,
+        buckets=(8, 32),
+        load_fractions=stream_fractions,
+        segments_at_capacity=segments_at_capacity,
+        runner=runner,
+    )
+    print(f"[load_sweep] stream: capacity "
+          f"{stream['capacity_segments_per_s']:.0f} seg/s, knee@"
+          f"{stream['knee'].get('knee_rate', float('nan')):.0f} "
+          f"(growth {stream['knee'].get('post_knee_growth', 0):.1f}x), "
+          f"urgent_survived={stream['overload']['urgent_survived']}, "
+          f"verdict={stream['overload']['verdict']}")
+
+    lin = lineage_sample(runner, make_engine, make_prompts,
+                         max_new=max_new)
+    for name in ("serve", "stream"):
+        print(f"[load_sweep] lineage[{name}]: "
+              f"{lin[name]['requests']} requests joined, "
+              f"{lin[name]['min_distinct_hops']}-"
+              f"{lin[name]['max_distinct_hops']} distinct hops")
+
+    rec = {
+        "benchmark": "load_sweep",
+        "smoke": bool(args.smoke),
+        "n_host_devices": jax.device_count(),
+        "serve": serve,
+        "stream": stream,
+        "lineage": lin,
+        "telemetry": obs.telemetry_section(),
+    }
+    if args.trace_out:
+        jsonl, chrome = obs.get().finish(args.trace_out)
+        rec["trace"] = {"jsonl": jsonl, "chrome": chrome}
+        print(f"[obs] trace written: {jsonl} + {chrome}")
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    print(f"[load_sweep] -> {args.out}")
+    if args.report:
+        from repro.obs import report
+
+        print(f"[load_sweep] report -> "
+              f"{report.render_report(rec, args.report)}")
+
+    # -- acceptance: the record self-asserts its claims -----------------
+    for name, sweep in (("serve", serve), ("stream", stream)):
+        assert len(sweep["points"]) >= 5, (name, len(sweep["points"]))
+        for p in sweep["points"]:
+            assert None not in (
+                p["p50_s"], p["p99_s"], p["p999_s"]
+            ), (name, p)
+        assert sweep["knee"]["detected"], (name, sweep["knee"])
+        g = sweep["coordinated_omission_guard"]
+        assert g["intended_ge_dequeue"], (name, g)
+        assert g["strictly_greater_at_overload"], (name, g)
+        assert sweep["overload"]["verdict"] == "graceful_degradation", (
+            name, sweep["overload"],
+        )
+    assert serve["slo"]["met_sub_saturated"], serve["slo"]
+    assert stream["slo"]["urgent_overload"]["met"], stream["slo"]
+    assert stream["overload"]["urgent_survived"]
+    assert stream["overload"]["never_dropped"]
+    # every sampled request joins across >= 3 subsystem hops
+    for name in ("serve", "stream"):
+        assert lin[name]["requests"] > 0, lin[name]
+        assert lin[name]["min_distinct_hops"] >= 3, lin[name]
+    t = rec["telemetry"]
+    assert t["schema_version"] == obs.SCHEMA_VERSION and t["enabled"]
+    print("[load_sweep] all assertions passed")
+
+
+if __name__ == "__main__":
+    main()

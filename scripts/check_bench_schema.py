@@ -1,0 +1,72 @@
+"""Bench-schema guard: every BENCH_*.json must carry the shared
+telemetry section.
+
+All benchmark records (BENCH_stream / BENCH_decode / BENCH_dist /
+BENCH_load, committed or CI-emitted) attach `repro.obs.
+telemetry_section()` under the "telemetry" key. A benchmark that stops
+doing so — or drifts to a different schema version — silently rots the
+cross-benchmark telemetry contract; this guard turns that into a CI
+failure.
+
+    python scripts/check_bench_schema.py BENCH_a.json [BENCH_b.json ...]
+
+Exits nonzero listing every violation. Checks per file:
+  * a "telemetry" dict is present;
+  * telemetry["schema_version"] == repro.obs.SCHEMA_VERSION;
+  * telemetry was enabled and the shared sub-sections exist
+    (counters / gauges / histograms / recompiles).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+REQUIRED_KEYS = ("counters", "gauges", "histograms", "recompiles")
+
+
+def check_file(path: str, schema_version: int) -> list[str]:
+    errors = []
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    tel = rec.get("telemetry")
+    if not isinstance(tel, dict):
+        return [f"{path}: no 'telemetry' section"]
+    v = tel.get("schema_version")
+    if v != schema_version:
+        errors.append(
+            f"{path}: telemetry schema_version {v!r}, "
+            f"expected {schema_version}"
+        )
+    if not tel.get("enabled"):
+        errors.append(f"{path}: telemetry was not enabled")
+    for k in REQUIRED_KEYS:
+        if not isinstance(tel.get(k), dict):
+            errors.append(f"{path}: telemetry missing {k!r}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_bench_schema.py BENCH_*.json", file=sys.stderr)
+        return 2
+    from repro import obs
+
+    errors = []
+    for path in argv:
+        errors.extend(check_file(path, obs.SCHEMA_VERSION))
+    for e in errors:
+        print(f"[bench-schema] FAIL {e}", file=sys.stderr)
+    if not errors:
+        print(
+            f"[bench-schema] {len(argv)} record(s) OK "
+            f"(telemetry schema v{obs.SCHEMA_VERSION})"
+        )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

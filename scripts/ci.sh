@@ -67,8 +67,28 @@ python -m pytest -x -q ${PYTEST_ARGS+"${PYTEST_ARGS[@]}"}
 #    event log is validated line-by-line against the repro.obs.trace
 #    event schema and the Chrome/Perfetto export checked well-formed
 #    (python -m repro.obs.trace exits nonzero on empty/malformed).
-python benchmarks/stream_throughput.py --smoke --out /tmp/BENCH_stream_ci.json
-python benchmarks/decode_throughput.py --smoke --out /tmp/BENCH_decode_ci.json
-python benchmarks/dist_compression.py --smoke --out /tmp/BENCH_dist_ci.json
+#  * load_sweep — the open-loop load lab: offered-load sweeps for both
+#    engines with latency from intended arrivals; asserts knee located,
+#    coordinated-omission guard, URGENT-class SLO survival under
+#    overload, and every sampled request's lineage joining across >= 3
+#    subsystem hops.
+python benchmarks/stream_throughput.py --smoke --out /tmp/BENCH_stream_ci.json --trace-out /tmp/ci_trace_stream
+python benchmarks/decode_throughput.py --smoke --out /tmp/BENCH_decode_ci.json --trace-out /tmp/ci_trace_decode
+python benchmarks/dist_compression.py --smoke --out /tmp/BENCH_dist_ci.json --trace-out /tmp/ci_trace_dist
+python benchmarks/load_sweep.py --smoke --out /tmp/BENCH_load_ci.json --trace-out /tmp/ci_trace_load
 python examples/serve_lm.py --smoke --trace-out /tmp/ci_trace
-python -m repro.obs.trace /tmp/ci_trace.jsonl /tmp/ci_trace.json
+
+# Every emitted trace is validated line-by-line against the
+# repro.obs.trace event schema and its Chrome/Perfetto export checked
+# well-formed (exits nonzero on empty/malformed) — not just the
+# serve_lm smoke.
+for t in /tmp/ci_trace /tmp/ci_trace_stream /tmp/ci_trace_decode \
+         /tmp/ci_trace_dist /tmp/ci_trace_load; do
+  python -m repro.obs.trace "$t.jsonl" "$t.json"
+done
+
+# Bench-schema guard: committed and CI-emitted BENCH records must all
+# carry the shared telemetry section at the expected schema_version —
+# a benchmark silently dropping telemetry fails here instead of
+# rotting.
+python scripts/check_bench_schema.py BENCH_*.json /tmp/BENCH_*_ci.json

@@ -92,6 +92,89 @@ def serve_lm(args) -> None:
     print("[serve] sample:", out[0][:12].tolist())
 
 
+def serve_load_sweep(args) -> None:
+    """Open-loop offered-load sweep over the slot engine (wall time):
+    measure the closed-loop capacity, then drive Poisson/trace-driven
+    arrival schedules at fractions of it and report tail latency from
+    *intended* arrival times, the saturation knee, TTFT SLO burn, and
+    the overload verdict (see `repro.obs.loadlab`)."""
+    import json as _json
+
+    from repro.obs import loadlab
+
+    cfg = configs.reduced(args.arch) if args.reduced else configs.get(
+        args.arch
+    )
+    max_seq = args.prompt_len + args.max_new + 2
+    model = api.build_model(cfg, tp=1, max_seq=max_seq)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+    mesh = make_serving_mesh(args.mesh) if args.mesh else None
+
+    def make_engine():
+        if mesh is not None:
+            return SH.ShardedEngine(
+                model, params, batch_size=args.batch, mesh=mesh
+            )
+        return E.Engine(model, params, batch_size=args.batch)
+
+    def make_prompts(n):
+        toks = jax.random.randint(
+            jax.random.fold_in(key, 2), (n, args.prompt_len), 0,
+            cfg.vocab,
+        )
+        return [jnp.asarray(toks[i], jnp.int32) for i in range(n)]
+
+    cap = loadlab.run_serve_point(
+        make_engine,
+        make_prompts(max(2 * args.batch, 8)),
+        rate_rps=1e5,  # everything intended at ~t=0: drain throughput
+        max_new=args.max_new,
+        key=jax.random.fold_in(key, 3),
+    )["achieved_rps"]
+    fractions = tuple(
+        float(f) for f in args.load_fractions.split(",")
+    )
+    out = loadlab.sweep_serve(
+        make_engine,
+        make_prompts,
+        capacity_rps=cap,
+        load_fractions=fractions,
+        n_requests=args.load_requests,
+        max_new=args.max_new,
+        seed=args.seed,
+        process=args.arrival_process,
+    )
+    print(
+        f"[serve] open-loop sweep: capacity ~{cap:.0f} req/s, "
+        f"{args.arrival_process} arrivals, "
+        f"{args.load_requests} requests/point"
+    )
+    for p in out["points"]:
+        print(
+            f"[serve]   {p['load_fraction']:>5.2f}x  "
+            f"offered {p['offered_load']:8.1f}/s  "
+            f"p50 {p['p50_s'] * 1e3:7.1f}ms  "
+            f"p99 {p['p99_s'] * 1e3:7.1f}ms  "
+            f"p99.9 {p['p999_s'] * 1e3:7.1f}ms"
+        )
+    k = out["knee"]
+    if k.get("detected"):
+        print(
+            f"[serve] saturation knee @ {k['knee_rate']:.1f} req/s "
+            f"(p99 grows {k['post_knee_growth']:.1f}x past it)"
+        )
+    slo = out["slo"]
+    print(
+        f"[serve] SLO {slo['declared']['name']} "
+        f"(bound {slo['declared']['bound'] * 1e3:.1f}ms): "
+        f"met sub-saturated = {slo['met_sub_saturated']}; "
+        f"overload verdict = {out['overload']['verdict']}"
+    )
+    if args.json:
+        print(_json.dumps(out, indent=1, default=float))
+
+
 def serve_va(args) -> None:
     from repro.configs import va_cnn
     from repro.core import compiler, vadetect
@@ -134,6 +217,21 @@ def main() -> None:
                          "(data x model), e.g. --mesh 8 or --mesh 4x2")
     ap.add_argument("--patients", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--load-sweep", action="store_true",
+                    help="run the open-loop offered-load sweep "
+                         "(repro.obs.loadlab) instead of one batch")
+    ap.add_argument("--load-fractions",
+                    default="0.25,0.5,0.75,1.0,2.0",
+                    help="offered load as fractions of measured "
+                         "capacity (comma-separated)")
+    ap.add_argument("--load-requests", type=int, default=24,
+                    help="requests per offered-load point")
+    ap.add_argument("--arrival-process", default="poisson",
+                    choices=["poisson", "trace"],
+                    help="interarrival process for --load-sweep")
+    ap.add_argument("--json", action="store_true",
+                    help="with --load-sweep: dump the full sweep "
+                         "record as JSON")
     ap.add_argument("--trace-out", default=None, metavar="PREFIX",
                     help="enable telemetry; on exit write PREFIX.jsonl "
                          "(event log) and PREFIX.json (Chrome/Perfetto "
@@ -144,7 +242,12 @@ def main() -> None:
                  "--temperature too (e.g. --temperature 1.0)")
     if args.trace_out:
         obs.configure(enabled=True)
-    if args.arch == "va-cnn":
+    if args.load_sweep:
+        if args.arch == "va-cnn":
+            ap.error("--load-sweep drives the LM slot engine; for the "
+                     "fleet sweep use repro.launch.stream --load-sweep")
+        serve_load_sweep(args)
+    elif args.arch == "va-cnn":
         serve_va(args)
     else:
         serve_lm(args)

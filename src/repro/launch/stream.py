@@ -46,6 +46,62 @@ def make_data_mesh(n_devices: int) -> jax.sharding.Mesh | None:
     )
 
 
+def stream_load_sweep(args, program, buckets, mesh) -> None:
+    """Open-loop offered-load sweep in virtual time: per-patient
+    Poisson/trace segment arrivals at fractions of the modeled fleet
+    capacity, latency from intended arrival, knee location, pinned
+    URGENT-cohort deadline-slack SLO, overload verdict
+    (see `repro.obs.loadlab`). Exactly reproducible on any host."""
+    from repro.obs import loadlab
+    from repro.stream import FleetRunner
+
+    runner = FleetRunner(program, path=args.path, mesh=mesh)
+    fractions = tuple(float(f) for f in args.load_fractions.split(","))
+    out = loadlab.sweep_stream(
+        n_patients=args.patients,
+        buckets=buckets,
+        load_fractions=fractions,
+        segments_at_capacity=args.segments_at_capacity,
+        seed=args.seed,
+        urgent_fraction=args.urgent_fraction,
+        process=args.arrival_process,
+        runner=runner,
+    )
+    if args.trace_out:
+        jsonl, chrome = obs.get().finish(args.trace_out)
+        print(f"[obs] trace written: {jsonl} + {chrome}")
+    if args.json:
+        print(json.dumps(out, indent=1, default=float))
+        return
+    print(
+        f"[stream] open-loop sweep: {args.patients} patients, "
+        f"buckets={list(buckets)}, capacity "
+        f"{out['capacity_segments_per_s']:.0f} seg/s, "
+        f"{args.arrival_process} arrivals"
+    )
+    for p in out["points"]:
+        print(
+            f"[stream]   {p['load_fraction']:>5.2f}x  "
+            f"offered {p['offered_load']:9.0f}/s  "
+            f"p50 {p['p50_s'] * 1e3:7.2f}ms  "
+            f"p99 {p['p99_s'] * 1e3:7.2f}ms  "
+            f"p99.9 {p['p999_s'] * 1e3:7.2f}ms  "
+            f"dropped={p['dropped']}"
+        )
+    k = out["knee"]
+    if k.get("detected"):
+        print(
+            f"[stream] saturation knee @ {k['knee_rate']:.0f} seg/s "
+            f"(p99 grows {k['post_knee_growth']:.1f}x past it)"
+        )
+    print(
+        f"[stream] URGENT cohort ({out['urgent_patients']} patients) "
+        f"overload burn rate "
+        f"{out['slo']['urgent_overload'].get('burn_rate'):.2f}; "
+        f"verdict = {out['overload']['verdict']}"
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--patients", type=int, default=256)
@@ -62,6 +118,23 @@ def main() -> None:
                     help="per-segment telemetry-gap probability")
     ap.add_argument("--max-wait", type=float, default=0.256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--load-sweep", action="store_true",
+                    help="run the open-loop offered-load sweep "
+                         "(repro.obs.loadlab, virtual time) instead "
+                         "of the periodic-arrival simulation")
+    ap.add_argument("--load-fractions",
+                    default="0.25,0.5,0.75,1.0,1.5,2.0",
+                    help="offered load as fractions of the modeled "
+                         "capacity (comma-separated)")
+    ap.add_argument("--segments-at-capacity", type=int, default=1024,
+                    help="virtual horizon, expressed as segments "
+                         "offered by the 1.0x point")
+    ap.add_argument("--urgent-fraction", type=float, default=0.125,
+                    help="pinned URGENT cohort fraction for the "
+                         "class-survival SLO")
+    ap.add_argument("--arrival-process", default="poisson",
+                    choices=["poisson", "trace"],
+                    help="interarrival process for --load-sweep")
     ap.add_argument("--json", action="store_true",
                     help="dump the full result record as JSON")
     ap.add_argument("--trace-out", default=None, metavar="PREFIX",
@@ -78,6 +151,9 @@ def main() -> None:
     mesh = make_data_mesh(args.devices)
     params = vadetect.init(jax.random.PRNGKey(args.seed))
     program = compiler.compile_model(params)
+    if args.load_sweep:
+        stream_load_sweep(args, program, buckets, mesh)
+        return
     cfg = FleetConfig(
         n_patients=args.patients,
         segments_per_patient=args.segments,

@@ -52,6 +52,13 @@ from repro.obs.registry import (
     latency_bounds,
     signed_bounds,
 )
+from repro.obs.lineage import (
+    assert_joined,
+    critical_path,
+    join_lineage,
+    serve_rid,
+    stream_rid,
+)
 from repro.obs.trace import (
     NULL_SPAN,
     NULL_TRACER,
@@ -185,6 +192,12 @@ __all__ = [
     "NULL_COUNTER",
     "NULL_GAUGE",
     "NULL_HISTOGRAM",
+    # lineage
+    "assert_joined",
+    "critical_path",
+    "join_lineage",
+    "serve_rid",
+    "stream_rid",
     # trace
     "Tracer",
     "NULL_SPAN",

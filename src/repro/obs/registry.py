@@ -173,6 +173,14 @@ class Histogram:
         i = int(np.searchsorted(self.bounds, float(x), side="right"))
         return int(self.counts[:i].sum())
 
+    def fraction_at_or_below(self, x: float) -> float:
+        """SLO compliance fraction: P(sample <= x). Exact at bucket
+        edges — which is why the signed layout keeps 0 explicit (the
+        deadline-slack SLO asks exactly 'what fraction was < 0')."""
+        if self.count == 0:
+            return math.nan
+        return self.count_at_or_below(x) / self.count
+
     # -- report -------------------------------------------------------------
 
     def summary(self) -> dict:

@@ -1,12 +1,19 @@
 """Structured span tracer: JSONL event log + Chrome/Perfetto export.
 
 One `Tracer` per process collects begin/end spans and instant events
-under a lock (the stream fleet, serve engine, and trainer all emit from
-the main thread today, but nothing in the schema assumes it). Events
-are plain dicts with a fixed schema (`validate_event`), streamed to a
-JSONL file on `write_jsonl` and exported as a Chrome trace-event JSON
-(`export_chrome`) that chrome://tracing and https://ui.perfetto.dev
-load directly.
+under a lock. Events are plain dicts with a fixed schema
+(`validate_event`), streamed to a JSONL file on `write_jsonl` and
+exported as a Chrome trace-event JSON (`export_chrome`) that
+chrome://tracing and https://ui.perfetto.dev load directly.
+
+Span nesting: every span/instant gets a process-unique `span_id` and
+the `parent_id` of the innermost span open *on its own thread* — the
+open-span stack lives in thread-local storage, so spans opened from
+worker threads parent to their own thread's enclosing span, never to
+whatever the main thread happens to have open (a process-global stack
+would cross-wire parent edges the moment two threads trace at once;
+`repro.obs.lineage` joins per-request critical paths along these edges,
+so they must be right). `parent_id == 0` marks a root span.
 
 Virtual time: subsystems that model time (the stream fleet's
 virtual-time loop) pass `v_ts_s`/`v_dur_s` span attributes; the Chrome
@@ -26,12 +33,15 @@ export in one call —
 
 from __future__ import annotations
 
+import itertools
 import json
 import threading
 import time
 from typing import Optional
 
 EVENT_TYPES = ("span", "instant", "counter")
+
+ROOT_SPAN_ID = 0  # parent_id of a span with no enclosing span
 
 # chrome trace-event pids: wall-clock events vs virtual-time mirrors
 WALL_PID = 0
@@ -47,12 +57,17 @@ class _NullSpan:
     def __exit__(self, *exc):
         return False
 
+    def set(self, **attrs):
+        """No-op twin of `_Span.set` (late attrs on a disabled span)."""
+        return self
+
 
 NULL_SPAN = _NullSpan()
 
 
 class _Span:
-    __slots__ = ("tracer", "name", "cat", "attrs", "_t0")
+    __slots__ = ("tracer", "name", "cat", "attrs", "_t0",
+                 "span_id", "parent_id")
 
     def __init__(self, tracer: "Tracer", name: str, cat: str,
                  attrs: dict):
@@ -61,18 +76,36 @@ class _Span:
         self.cat = cat
         self.attrs = attrs
 
+    def set(self, **attrs):
+        """Attach attrs discovered mid-span (e.g. the request ids a
+        pack decided on) — recorded at `__exit__` with the rest."""
+        self.attrs.update(attrs)
+        return self
+
     def __enter__(self):
+        stack = self.tracer._open_stack()
+        self.span_id = self.tracer._next_id()
+        self.parent_id = stack[-1] if stack else ROOT_SPAN_ID
+        stack.append(self.span_id)
         self._t0 = time.perf_counter()
         return self
 
     def __exit__(self, *exc):
         t1 = time.perf_counter()
+        stack = self.tracer._open_stack()
+        # tolerate a mis-nested exit rather than corrupting the stack
+        if stack and stack[-1] == self.span_id:
+            stack.pop()
+        elif self.span_id in stack:
+            del stack[stack.index(self.span_id):]
         self.tracer._record(
             type="span",
             name=self.name,
             cat=self.cat,
             ts_us=(self._t0 - self.tracer._t0) * 1e6,
             dur_us=(t1 - self._t0) * 1e6,
+            span_id=self.span_id,
+            parent_id=self.parent_id,
             attrs=self.attrs,
         )
         return False
@@ -84,6 +117,20 @@ class Tracer:
         self._lock = threading.Lock()
         self._events: list[dict] = []
         self._t0 = time.perf_counter()
+        # span ids are process-unique (itertools.count.__next__ is a
+        # single C call — atomic under the GIL); the OPEN-span stack is
+        # per-thread so parent edges never cross threads
+        self._ids = itertools.count(1)
+        self._tls = threading.local()
+
+    def _next_id(self) -> int:
+        return next(self._ids)
+
+    def _open_stack(self) -> list:
+        stack = getattr(self._tls, "stack", None)
+        if stack is None:
+            stack = self._tls.stack = []
+        return stack
 
     # -- emission -----------------------------------------------------------
 
@@ -99,12 +146,15 @@ class Tracer:
     def instant(self, name: str, cat: str = "app", **attrs) -> None:
         if not self.enabled:
             return
+        stack = self._open_stack()
         self._record(
             type="instant",
             name=name,
             cat=cat,
             ts_us=(time.perf_counter() - self._t0) * 1e6,
             dur_us=0.0,
+            span_id=self._next_id(),
+            parent_id=stack[-1] if stack else ROOT_SPAN_ID,
             attrs=attrs,
         )
 
@@ -242,6 +292,16 @@ def validate_event(e: dict) -> None:
         raise ValueError(f"unknown event type {e['type']!r}")
     if e["ts_us"] < 0 or e["dur_us"] < 0:
         raise ValueError(f"negative timestamp/duration: {e!r}")
+    # span_id/parent_id: optional (absent in pre-lineage traces) but
+    # typed when present; a span must never parent itself
+    for key in ("span_id", "parent_id"):
+        if key in e and not isinstance(e[key], int):
+            raise ValueError(
+                f"event field {key!r} has type "
+                f"{type(e[key]).__name__}, wanted int: {e!r}"
+            )
+    if "span_id" in e and e.get("parent_id") == e["span_id"]:
+        raise ValueError(f"self-parenting span: {e!r}")
 
 
 def validate_jsonl(path: str) -> int:

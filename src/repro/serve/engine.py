@@ -241,10 +241,17 @@ class Engine:
             # derive the first token from (admission would crash deep
             # in the prefill cell with an opaque shape error)
             raise ValueError(f"request {req.uid}: empty prompt")
-        if obs.get().enabled:
+        tel = obs.get()
+        if tel.enabled:
             self._t_submit[req.uid] = time.perf_counter()
+            # lineage root: mints the request id at the queue boundary
+            tel.tracer.instant(
+                "serve/submit", cat="serve",
+                request_id=f"serve:{req.uid}",
+                prompt_len=int(req.prompt.shape[0]),
+            )
         self._queue.append(req)
-        obs.get().registry.counter("serve.submitted_total").inc()
+        tel.registry.counter("serve.submitted_total").inc()
 
     def _admit(self) -> None:
         # admission rounds: requests finishing at admission (EOS on
@@ -268,12 +275,25 @@ class Engine:
     def _admit_group(self, s_len: int, pairs: list) -> None:
         """One batched prefill + scatter-seat for same-length prompts."""
         tel = obs.get()
+        tagged = (
+            {"request_ids": [f"serve:{r.uid}" for _, r in pairs]}
+            if tel.enabled
+            else {}
+        )
         with tel.span(
-            "serve/admit", cat="serve", s_len=s_len, n=len(pairs)
+            "serve/admit", cat="serve", s_len=s_len, n=len(pairs),
+            **self._admit_span_attrs(), **tagged,
         ):
-            self._admit_group_inner(tel, s_len, pairs)
+            self._admit_group_inner(tel, s_len, pairs, tagged)
 
-    def _admit_group_inner(self, tel, s_len: int, pairs: list) -> None:
+    def _admit_span_attrs(self) -> dict:
+        """Extra attrs for the admission span (`ShardedEngine` reports
+        its mesh/width placement here)."""
+        return {}
+
+    def _admit_group_inner(
+        self, tel, s_len: int, pairs: list, tagged: dict = {},
+    ) -> None:
         reqs = [r for _, r in pairs]
         n = len(reqs)
         rows = self._admission_rows(n)
@@ -286,8 +306,12 @@ class Engine:
                  jnp.broadcast_to(prompts[-1:], (rows - n, s_len))]
             )
         prefill, seat, place = self._admission_cell(rows)
-        logits, cache_rows = prefill(self.params, place(prompts))
-        tel.block(logits)
+        with tel.span(
+            "serve/prefill", cat="serve", s_len=s_len, rows=rows,
+            **tagged,
+        ):
+            logits, cache_rows = prefill(self.params, place(prompts))
+            tel.block(logits)
         self.admission_rowsteps += rows * s_len
         self.admission_prefills += 1
         tel.registry.counter("serve.admission_rowsteps").add(rows * s_len)
@@ -329,6 +353,13 @@ class Engine:
                 req.done = True
                 self.active = self.active.at[slot].set(False)
                 self._t_last_tok.pop(slot, None)
+                if tel.enabled:
+                    tel.tracer.instant(
+                        "serve/finish", cat="serve",
+                        request_id=f"serve:{req.uid}",
+                        n_tokens=len(req.output),
+                        at_admission=True,
+                    )
                 continue
             src.append(j)
             dst.append(slot)
@@ -343,10 +374,15 @@ class Engine:
             )
             self._nout = self._nout.at[slot].set(1)
         if src:
-            self.cache = seat(
-                self.cache, cache_rows,
-                jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32),
-            )
+            with tel.span(
+                "serve/seat", cat="serve", n=len(src), **tagged,
+            ):
+                self.cache = seat(
+                    self.cache, cache_rows,
+                    jnp.asarray(src, jnp.int32),
+                    jnp.asarray(dst, jnp.int32),
+                )
+                tel.block(self.cache)
 
     def _step_single(self, slot: int, token: int, pos: int) -> jax.Array:
         """Compatibility shim (the PR 2/3 replay admission ran prompts
@@ -378,19 +414,28 @@ class Engine:
         # future tenant's scatter-seat wouldn't overwrite anyway)
         pos = jnp.where(self.active, self.pos + 1, self._cpos)
         toks = jnp.where(self.active, self.tokens, self._ctok)
-        logits, self.cache = self._decode(
-            self.params, self.cache, toks, pos
+        tagged = (
+            {"request_ids": [
+                f"serve:{r.uid}" for r in self._slots if r is not None
+            ]}
+            if tel.enabled
+            else {}
         )
-        if self.greedy:
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        else:
-            step_keys = jax.vmap(jax.random.fold_in)(
-                self._slot_keys, self._nout
+        with tel.span("serve/decode", cat="serve", **tagged):
+            logits, self.cache = self._decode(
+                self.params, self.cache, toks, pos
             )
-            nxt = sample_tokens(
-                logits, step_keys,
-                temperature=self.temperature, top_k=self.top_k,
-            )
+            if self.greedy:
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                step_keys = jax.vmap(jax.random.fold_in)(
+                    self._slot_keys, self._nout
+                )
+                nxt = sample_tokens(
+                    logits, step_keys,
+                    temperature=self.temperature, top_k=self.top_k,
+                )
+            tel.block(nxt)
         # this decode fed (toks, pos) into every slot's cache
         self._ctok = toks
         self._cpos = pos
@@ -423,6 +468,12 @@ class Engine:
                 self.active = self.active.at[slot].set(False)
                 self._t_last_tok.pop(slot, None)
                 tel.registry.counter("serve.completed_total").inc()
+                if tel.enabled:
+                    tel.tracer.instant(
+                        "serve/finish", cat="serve",
+                        request_id=f"serve:{req.uid}",
+                        n_tokens=len(req.output),
+                    )
             else:
                 n_active += 1
         return n_active

@@ -304,6 +304,14 @@ class ShardedEngine(Engine):
         # must divide over the mesh data axes (strict guard), so pad up
         return n + (-n) % max(self.plan.n_data, 1)
 
+    def _admit_span_attrs(self) -> dict:
+        # seen in the trace: which mesh this admission ran on, so a
+        # lineage join can attribute seating cost per (mesh, width)
+        return {
+            "mesh": "x".join(str(d) for d in self.mesh.devices.shape),
+            "n_data": int(self.plan.n_data),
+        }
+
     def _admission_cell(self, rows: int):
         cell = self._adm_cells.get(rows)
         if cell is None:

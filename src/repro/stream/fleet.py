@@ -42,6 +42,7 @@ from repro.stream.sources import (
     FleetSource,
     SourceConfig,
     advance_virtual_time,
+    check_refs,
 )
 
 
@@ -119,10 +120,27 @@ def simulate(
     runner: Optional[FleetRunner] = None,
     mesh=None,
     collect_diagnoses: bool = False,
+    arrivals=None,
+    pinned_urgent=None,
+    collect_latency: bool = False,
 ) -> dict:
     """Run the fleet for `segments_per_patient` segments per patient and
     return {metrics, chip, accuracy, ...}. Pass either a compiled
-    `program` (a runner is built over it) or a ready `runner`."""
+    `program` (a runner is built over it) or a ready `runner`.
+
+    Load-lab hooks: `arrivals` replaces the source's periodic schedule
+    with an explicit `SegmentRef` list (the open-loop Poisson /
+    trace-driven schedules `obs.loadlab` generates); `pinned_urgent`
+    (bool (n_patients,)) pins the scheduler's URGENT bitmap to a fixed
+    cohort — it *replaces* the vote layer's feedback, so class
+    survival under overload is testable independent of what an
+    untrained classifier happens to vote;
+    `collect_latency=True` returns raw per-segment arrays under
+    "latency" — `latency_s` (modeled completion − *intended arrival*,
+    the coordinated-omission-safe measurement), `slack_s`, `urgent`
+    (priority class at pack time), and `latency_from_pack_s`
+    (completion − pack instant, the dequeue-based number the CO guard
+    must dominate)."""
     if runner is None:
         if program is None:
             import jax
@@ -132,8 +150,15 @@ def simulate(
         runner = FleetRunner(program, path=cfg.path, mesh=mesh)
 
     source = FleetSource(cfg.source_config())
-    refs = source.arrivals(cfg.segments_per_patient)
+    refs = (
+        check_refs(list(arrivals), cfg.n_patients)
+        if arrivals is not None
+        else source.arrivals(cfg.segments_per_patient)
+    )
     sched = MicroBatchScheduler(cfg.scheduler_config(), cfg.n_patients)
+    if pinned_urgent is not None:
+        pinned_urgent = np.asarray(pinned_urgent, bool)
+        sched.set_urgent(pinned_urgent)
     vstate = V.init(cfg.n_patients)
     metrics = FleetMetrics()
     bank = _SignalBank(source, refs) if cfg.pregen else None
@@ -154,6 +179,12 @@ def simulate(
     chip_s_per_patient = np.zeros(cfg.n_patients)
     final_diag = np.full(cfg.n_patients, -1, np.int64)
     diagnoses = []
+    lat_records = (
+        {"latency_s": [], "slack_s": [], "urgent": [],
+         "latency_from_pack_s": [], "patient": []}
+        if collect_latency
+        else None
+    )
     i, now = 0, 0.0
     while i < len(refs) or sched.ready():
         if sched.ready() == 0 and i < len(refs):
@@ -181,12 +212,21 @@ def simulate(
         batch = sched.next_batch(now)
         if batch is None:
             continue
+        # one rid list per batch, computed at pack time and shared by
+        # every hop the batch's segments take (flush / classify / vote)
+        # — the lineage join reads it back as `request_ids`
+        tagged = (
+            {"request_ids": batch.request_ids}
+            if batch.request_ids is not None
+            else {}
+        )
         t_flush = time.perf_counter()
         with tel.span(
             "stream/flush", cat="stream",
             bucket=batch.bucket, n_valid=batch.n_valid,
             v_ts_s=now,
             v_dur_s=runner.batch_service_s(batch.bucket),
+            **tagged,
         ):
             sigs = (
                 bank.gather(batch.patients, batch.seqs)
@@ -196,17 +236,32 @@ def simulate(
                 )
             )
             with tel.span(
-                "stream/classify", cat="stream", bucket=batch.bucket
+                "stream/classify", cat="stream", bucket=batch.bucket,
+                v_ts_s=now, **tagged,
             ):
                 preds = tel.block(runner.classify(jnp.asarray(sigs)))
-            vstate, emit, diag, urgent = V.update(
-                vstate,
-                jnp.asarray(batch.patients),
-                preds,
-                jnp.asarray(batch.valid),
-            )
+            with tel.span(
+                "stream/vote", cat="stream", v_ts_s=now, **tagged,
+            ):
+                # deliberately NOT tel.block()ed: the vote result is
+                # consumed (np.asarray) a few statements down, so the
+                # sync overlaps the host-side bookkeeping in both
+                # modes — blocking here would serialize that overlap
+                # only when telemetry is on and blow the <3% enabled
+                # budget. Wall dur is dispatch-only; the virtual track
+                # (v_ts_s/v_dur_s on the flush span) carries timing.
+                vstate, emit, diag, urgent = V.update(
+                    vstate,
+                    jnp.asarray(batch.patients),
+                    preds,
+                    jnp.asarray(batch.valid),
+                )
         flush_hist.observe(time.perf_counter() - t_flush)
-        sched.set_urgent(np.asarray(urgent))
+        sched.set_urgent(
+            pinned_urgent
+            if pinned_urgent is not None
+            else np.asarray(urgent)
+        )
 
         service = runner.batch_service_s(batch.bucket)
         # forced minimum progress: at adversarially large virtual times
@@ -230,6 +285,21 @@ def simulate(
             queue_depth=sched.ready(),
             completion_s=completion,
         )
+        if lat_records is not None:
+            lat_records["latency_s"].append(
+                completion - batch.arrivals[valid]
+            )
+            lat_records["slack_s"].append(
+                batch.deadlines[valid] - completion
+            )
+            lat_records["urgent"].append(
+                batch.priorities[valid] == PRIORITY_URGENT
+            )
+            lat_records["latency_from_pack_s"].append(
+                np.full(int(valid.sum()),
+                        completion - batch.formed_at_s)
+            )
+            lat_records["patient"].append(batch.patients[valid])
         emit_np = np.asarray(emit)
         if emit_np.any():
             diag_np = np.asarray(diag)
@@ -288,4 +358,18 @@ def simulate(
         },
         "jit_cache_misses": runner.jit_cache_misses(),
         "diagnoses": diagnoses if collect_diagnoses else None,
+        "latency": (
+            {
+                k: (
+                    np.concatenate(v)
+                    if v
+                    else np.zeros(0, {
+                        "urgent": bool, "patient": np.int64,
+                    }.get(k, np.float64))
+                )
+                for k, v in lat_records.items()
+            }
+            if lat_records is not None
+            else None
+        ),
     }

@@ -145,7 +145,15 @@ class FleetMetrics:
                 # named explicitly so JSON consumers can't misread it
                 # as the 99th percentile
                 "worst_1pct": float(self._slack.quantile(0.01)),
+                # the p99.9 analogue (slack 99.9% of segments exceed) —
+                # the stream SLO's metric: worst_0p1pct >= 0 means
+                # "p99.9 deadline slack is non-negative"
+                "worst_0p1pct": float(self._slack.quantile(0.001)),
                 "min": float(self._slack.min),  # exact
                 "violations": int(self._violations),  # exact, strict < 0
+                # exact (rides the exact violation count, not buckets)
+                "ok_fraction": float(
+                    1.0 - self._violations / self._slack.count
+                ),
             }
         return out

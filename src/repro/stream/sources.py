@@ -102,6 +102,40 @@ class SegmentRef:
     deadline_s: float
 
 
+def check_refs(refs: list[SegmentRef], n_patients: int) -> list[SegmentRef]:
+    """Validate an externally-built arrival schedule before the fleet
+    loop consumes it (the open-loop load lab hands `fleet.simulate`
+    explicit schedules in place of `FleetSource.arrivals`): patients in
+    range, (patient, seq) identities unique — signal content is keyed
+    on them, so a duplicate would silently classify the same segment
+    twice — deadlines after arrivals, and arrival-sorted order (the
+    event loop pops the head). Returns `refs` unchanged."""
+    seen: set[tuple[int, int]] = set()
+    prev = -np.inf
+    for r in refs:
+        if not 0 <= r.patient < n_patients:
+            raise ValueError(
+                f"SegmentRef patient {r.patient} outside fleet of "
+                f"{n_patients}"
+            )
+        ident = (r.patient, r.seq)
+        if ident in seen:
+            raise ValueError(f"duplicate SegmentRef identity {ident}")
+        seen.add(ident)
+        if not (r.deadline_s > r.arrival_s >= 0.0):
+            raise ValueError(
+                f"SegmentRef {ident} needs deadline > arrival >= 0, "
+                f"got arrival={r.arrival_s} deadline={r.deadline_s}"
+            )
+        if r.arrival_s < prev:
+            raise ValueError(
+                "arrival schedule must be sorted by arrival_s "
+                f"(violated at {ident})"
+            )
+        prev = r.arrival_s
+    return refs
+
+
 # module-level so every FleetSource instance (one per benchmark sweep
 # cell, per test) shares one compiled program per batch shape; seed and
 # va_fraction fold in as traced data (same pattern as iegm._stream_one)

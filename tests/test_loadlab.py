@@ -1,0 +1,361 @@
+"""repro.obs.lineage + repro.obs.loadlab: arrival-process properties,
+knee/SLO/coordinated-omission units, lineage joining across real
+engine hops, and the end-to-end virtual-time stream sweep.
+
+The hypothesis property (an ISSUE-mandated satellite) pins the arrival
+generator's contract: bitwise deterministic under `fold_in(key, uid)`
+— same (key, uid, rate, n, process) always yields byte-identical gap
+arrays — and empirically rate-correct (mean interarrival ~ 1/rate)
+across seeds and rates for both the Poisson and trace-driven
+processes.
+"""
+
+import json
+import xml.etree.ElementTree as ET
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import obs
+from repro.obs import lineage, loadlab
+from repro.obs.loadlab import SLO, co_guard, locate_knee
+from repro.stream.sources import SegmentRef, check_refs
+
+_RATES = (0.5, 2.0, 50.0, 1000.0)
+
+
+@pytest.fixture(autouse=True)
+def _reset_obs():
+    yield
+    obs.reset()
+
+
+# ---------------------------------------------------------------------------
+# arrival processes: determinism + rate correctness (satellite)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    uid=st.integers(0, 100_000),
+    rate=st.sampled_from(_RATES),
+    process=st.sampled_from(loadlab.ARRIVAL_PROCESSES),
+)
+def test_arrivals_bitwise_deterministic(seed, uid, rate, process):
+    key = jax.random.PRNGKey(seed)
+    a = loadlab.interarrival_gaps(
+        key, uid, rate_hz=rate, n=64, process=process
+    )
+    b = loadlab.interarrival_gaps(
+        key, uid, rate_hz=rate, n=64, process=process
+    )
+    assert a.tobytes() == b.tobytes()  # bitwise, not approx
+    assert np.all(a > 0)
+    # independent streams per uid: poisson gaps must differ (fold_in
+    # decorrelates); the trace process shifts phase, which can collide
+    # for two uids, so only the poisson side asserts inequality
+    if process == "poisson":
+        c = loadlab.interarrival_gaps(
+            key, uid + 1, rate_hz=rate, n=64, process=process
+        )
+        assert a.tobytes() != c.tobytes()
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    rate=st.sampled_from(_RATES),
+    process=st.sampled_from(loadlab.ARRIVAL_PROCESSES),
+)
+def test_arrivals_rate_correct(seed, rate, process):
+    # poisson: std of the mean gap over n draws is (1/rate)/sqrt(n)
+    # (~1.6% at n=4096), so 10% is > 6 sigma; trace: the cyclic
+    # template replay deviates from mean 1/rate only by the partial
+    # last cycle, bounded well under 10% at this n
+    n = 4096
+    gaps = loadlab.interarrival_gaps(
+        jax.random.PRNGKey(seed), 7, rate_hz=rate, n=n, process=process
+    )
+    assert gaps.mean() == pytest.approx(1.0 / rate, rel=0.10)
+    t = loadlab.arrival_times(
+        jax.random.PRNGKey(seed), 7, rate_hz=rate, n=64, process=process
+    )
+    assert np.all(np.diff(t) > 0) and t[0] > 0
+
+
+def test_arrivals_reject_bad_args():
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError):
+        loadlab.interarrival_gaps(key, 0, rate_hz=0.0, n=4)
+    with pytest.raises(ValueError):
+        loadlab.interarrival_gaps(key, 0, rate_hz=1.0, n=0)
+    with pytest.raises(ValueError):
+        loadlab.interarrival_gaps(
+            key, 0, rate_hz=1.0, n=4, process="uniform"
+        )
+    with pytest.raises(ValueError):
+        loadlab.interarrival_gaps(
+            key, 0, rate_hz=1.0, n=4, process="trace",
+            template=(1.0, -0.5),
+        )
+
+
+# ---------------------------------------------------------------------------
+# knee / SLO / CO-guard units
+# ---------------------------------------------------------------------------
+
+
+def _pts(p99s):
+    return [
+        {"offered_load": 10.0 * (i + 1), "p99_s": v}
+        for i, v in enumerate(p99s)
+    ]
+
+
+def test_locate_knee_detects_growth():
+    k = locate_knee(_pts([0.010, 0.011, 0.012, 0.090]))
+    assert k["detected"]
+    assert k["knee_rate"] == 30.0
+    assert k["first_post_knee_rate"] == 40.0
+    assert k["post_knee_growth"] == pytest.approx(9.0)
+    assert k["n_sub_saturated"] == 3 and k["n_post_knee"] == 1
+
+
+def test_locate_knee_needs_both_sides():
+    assert not locate_knee(_pts([0.010, 0.011, 0.012]))["detected"]
+    assert not locate_knee(_pts([0.010]))["detected"]
+
+
+def test_locate_knee_baseline_is_fastest_point():
+    # a host hiccup on the lowest-rate point must not fake a knee:
+    # baseline comes from the fastest point, not points[0]
+    k = locate_knee(_pts([0.050, 0.010, 0.011, 0.090]))
+    assert k["baseline_s"] == pytest.approx(0.010)
+    assert k["detected"] and k["n_post_knee"] == 1
+
+
+def test_slo_burn_accounting():
+    slo = SLO(name="x", metric="m", bound=0.1, target=0.99)
+    perfect = slo.evaluate(100, 100)
+    assert perfect["met"] and perfect["burn_rate"] == 0.0
+    at_budget = slo.evaluate(99, 100)
+    assert at_budget["met"] and at_budget["burn_rate"] == pytest.approx(1.0)
+    over = slo.evaluate(97, 100)
+    assert not over["met"] and over["burn_rate"] == pytest.approx(3.0)
+    assert slo.evaluate(0, 0)["met"] is None
+
+
+def test_co_guard_contract():
+    ok = co_guard([2.0, 3.0], [1.0, 1.5], saturated=True)
+    assert ok["intended_ge_dequeue"]
+    assert ok["strictly_greater_at_overload"]
+    assert ok["mean_queue_excess_s"] == pytest.approx(1.25)
+    # intended below dequeue => the schedule wasn't open-loop
+    with pytest.raises(AssertionError):
+        co_guard([1.0], [2.0], saturated=False)
+    # no queueing excess at overload => closed-loop in disguise
+    with pytest.raises(AssertionError):
+        co_guard([1.0, 2.0], [1.0, 2.0], saturated=True)
+    # unsaturated equality is fine
+    assert co_guard([1.0], [1.0], saturated=False)[
+        "strictly_greater_at_overload"
+    ] is None
+
+
+# ---------------------------------------------------------------------------
+# explicit arrival schedules (stream side)
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_segment_refs_deterministic_and_valid():
+    kw = dict(
+        n_patients=6, rate_segments_per_s=100.0, horizon_s=0.5,
+        deadline_s=0.05, seed=3,
+    )
+    a = loadlab.poisson_segment_refs(**kw)
+    b = loadlab.poisson_segment_refs(**kw)
+    assert a == b  # frozen dataclasses compare by value
+    assert len(a) > 0
+    check_refs(a, 6)  # sorted, unique, in-range, deadline > arrival
+    assert all(r.deadline_s == pytest.approx(r.arrival_s + 0.05)
+               for r in a)
+    assert all(r.arrival_s <= 0.5 for r in a)
+
+
+def test_check_refs_rejects_malformed():
+    good = SegmentRef(patient=0, seq=0, arrival_s=0.1, deadline_s=0.2)
+    check_refs([good], 1)
+    with pytest.raises(ValueError):  # patient out of range
+        check_refs([good], 0)
+    with pytest.raises(ValueError):  # duplicate identity
+        check_refs([good, good], 1)
+    with pytest.raises(ValueError):  # deadline before arrival
+        check_refs(
+            [SegmentRef(patient=0, seq=0, arrival_s=0.2,
+                        deadline_s=0.1)], 1,
+        )
+    with pytest.raises(ValueError):  # unsorted
+        check_refs(
+            [
+                SegmentRef(patient=0, seq=1, arrival_s=0.5,
+                           deadline_s=0.6),
+                SegmentRef(patient=0, seq=0, arrival_s=0.1,
+                           deadline_s=0.2),
+            ],
+            1,
+        )
+
+
+# ---------------------------------------------------------------------------
+# lineage join + critical path (synthetic events)
+# ---------------------------------------------------------------------------
+
+
+def _ev(name, ts_us, dur_us, span_id, parent_id=0, **attrs):
+    return {"name": name, "ts_us": ts_us, "dur_us": dur_us,
+            "span_id": span_id, "parent_id": parent_id, "attrs": attrs}
+
+
+def test_join_and_critical_path():
+    events = [
+        _ev("serve/submit", 0.0, 0.0, 1, request_id="serve:1"),
+        _ev("serve/admit", 10.0, 8.0, 2,
+            request_ids=["serve:1", "serve:2"]),
+        _ev("serve/prefill", 11.0, 3.0, 3, parent_id=2,
+            request_ids=["serve:1", "serve:2"]),
+        _ev("serve/seat", 15.0, 2.0, 4, parent_id=2,
+            request_ids=["serve:1", "serve:2"]),
+        _ev("serve/decode", 20.0, 6.0, 5, request_ids=["serve:1"]),
+        _ev("serve/finish", 30.0, 0.0, 6, request_id="serve:1"),
+    ]
+    joined = lineage.join(events)
+    assert set(joined) == {"serve:1", "serve:2"}
+    assert [h.name for h in joined["serve:1"]] == [
+        "serve/submit", "serve/admit", "serve/prefill", "serve/seat",
+        "serve/decode", "serve/finish",
+    ]
+    cp = lineage.critical_path(joined["serve:1"])
+    # queue wait: submit (0) until the first working span (prefill @11)
+    assert cp["queue_wait_s"] == pytest.approx(11e-6)
+    assert cp["phases_s"] == pytest.approx(
+        {"prefill": 3e-6, "seat": 2e-6, "decode": 6e-6}
+    )
+    assert cp["total_s"] == pytest.approx(30e-6)  # until the finish
+    # serve:2 has no finish instant: entry falls back to its first
+    # hop (admit @10) and total runs to the last span end — the admit
+    # span's own end (10+8), which outlives its seat child (15+2)
+    cp2 = lineage.critical_path(joined["serve:2"])
+    assert cp2["total_s"] == pytest.approx(8e-6)
+
+    s = lineage.summarize(events)
+    assert s["requests"] == 2
+    assert s["min_distinct_hops"] == 3 and s["max_distinct_hops"] == 6
+
+    lineage.assert_joined(events, min_hops=3)
+    with pytest.raises(AssertionError):
+        lineage.assert_joined(events, min_hops=4)  # serve:2 has 3
+    with pytest.raises(AssertionError):
+        lineage.assert_joined([], min_hops=1)  # dark tagging
+
+
+def test_critical_path_virtual_track():
+    hops = [
+        lineage.Hop("stream/enqueue", 0.0, 0.0, 1, 0, v_ts_s=1.0),
+        lineage.Hop("stream/classify", 5e-6, 2e-6, 2, 0,
+                    v_ts_s=1.25, v_dur_s=0.05),
+    ]
+    cp = lineage.critical_path(hops)
+    assert cp["v_total_s"] == pytest.approx(0.30)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: stream lineage through real hops + the virtual-time sweep
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def runner():
+    from repro.core import compiler, vadetect
+    from repro.stream.runner import FleetRunner
+
+    params = vadetect.init(jax.random.PRNGKey(0))
+    return FleetRunner(compiler.compile_model(params))
+
+
+def test_stream_lineage_joins_all_hops(runner):
+    from repro.stream.fleet import FleetConfig, simulate
+
+    tel = obs.configure(enabled=True)
+    cfg = FleetConfig(n_patients=6, segments_per_patient=2, seed=0,
+                      buckets=(8,), va_fraction=0.0)
+    simulate(cfg, runner=runner)
+    joined = lineage.assert_joined(
+        tel.tracer.events(), min_hops=3, expect_prefix="stream:"
+    )
+    mine = {r: h for r, h in joined.items() if r.startswith("stream:")}
+    assert len(mine) == 12  # every segment, no drops
+    for hops in mine.values():
+        assert {h.name for h in hops} == {
+            "stream/enqueue", "stream/pack", "stream/flush",
+            "stream/classify", "stream/vote",
+        }
+        cp = lineage.critical_path(hops)
+        assert cp["v_total_s"] >= 0.0
+        assert set(cp["phases_s"]) == {"classify", "vote"}
+
+
+def test_sweep_stream_end_to_end(runner, tmp_path):
+    out = loadlab.sweep_stream(
+        n_patients=8,
+        buckets=(8, 16),
+        load_fractions=(0.25, 0.5, 1.0, 2.0, 3.0),
+        segments_at_capacity=192,
+        seed=0,
+        runner=runner,
+    )
+    assert len(out["points"]) == 5
+    for p in out["points"]:
+        assert p["dropped"] == 0
+        for k in ("p50_s", "p99_s", "p999_s"):
+            assert p[k] is not None and p[k] > 0
+    # deterministic virtual time: the knee and verdicts are exact,
+    # not flaky-wall-clock properties
+    assert out["knee"]["detected"], out["knee"]
+    g = out["coordinated_omission_guard"]
+    assert g["intended_ge_dequeue"] and g["strictly_greater_at_overload"]
+    assert out["slo"]["urgent_overload"]["met"]
+    assert out["overload"]["verdict"] == "graceful_degradation"
+
+    # identical inputs reproduce bitwise (virtual time, fold_in keys)
+    again = loadlab.sweep_stream(
+        n_patients=8,
+        buckets=(8, 16),
+        load_fractions=(0.25, 0.5, 1.0, 2.0, 3.0),
+        segments_at_capacity=192,
+        seed=0,
+        runner=runner,
+    )
+    assert json.dumps(out, sort_keys=True, default=float) == json.dumps(
+        again, sort_keys=True, default=float
+    )
+
+    # the report renders this record standalone: well-formed SVG,
+    # percentile curves + knee marker + data table
+    path = loadlab_report(out, tmp_path)
+    doc = open(path).read()
+    assert "<svg" in doc and "<table>" in doc
+    import re
+
+    for svg in re.findall(r"<svg.*?</svg>", doc, flags=16):
+        ET.fromstring(svg)
+
+
+def loadlab_report(stream_out, tmp_path):
+    from repro.obs import report
+
+    rec = {"stream": stream_out, "smoke": True}
+    return report.render_report(rec, str(tmp_path / "report.html"))
