@@ -17,6 +17,14 @@ Drives both request paths through `repro.obs.loadlab` sweeps:
     the modeled capacity, exactly reproducible on any host. A
     pinned URGENT cohort checks class survival: preemption must keep
     its p99.9 deadline slack non-negative through 3x overload.
+  * **frontend** (wall time, loopback socket) — the async serving
+    frontend (`repro.serve.frontend`) with its admission bucket pinned
+    to the serve sweep's measured knee, offered 0.25x/1x/3x that rate
+    over a real TCP socket. Past the knee LM requests shed with typed
+    rejections (accounting stays exact: submitted == completed +
+    rejected), ROUTINE segments defer, URGENT segments always land. A
+    paired in-process run at the lowest sub-knee point prices the
+    transport itself (socket-minus-inproc tail delta).
 
 Both sweeps locate the saturation knee (last point whose p99 stays
 within 3x the fastest point's) and evaluate declared SLOs with
@@ -56,6 +64,7 @@ from repro.core import compiler, vadetect
 from repro.models import api
 from repro.obs import lineage, loadlab
 from repro.serve.engine import Engine, Request
+from repro.serve.frontend import Frontend, FrontendConfig, SocketClient
 from repro.stream.fleet import FleetConfig, simulate
 from repro.stream.runner import FleetRunner
 
@@ -143,6 +152,66 @@ def lineage_sample(runner, make_engine, make_prompts, *, max_new: int,
     return out
 
 
+def frontend_lineage_sample(make_engine, runner, make_prompts, *,
+                            max_new: int, n_lm: int = 6,
+                            n_patients: int = 4,
+                            n_samples: int = 8) -> dict:
+    """Traced loopback-socket run with admission control off (nothing
+    sheds), joined into per-request lineages: every request — LM and
+    segment — must span >= 4 distinct hops INCLUDING the transport hop
+    (client-minted ids survive the wire)."""
+    import asyncio
+
+    # warm under the ambient telemetry so the warmup requests'
+    # uid>=1e6 lineages don't land in the sampled trace (they have no
+    # transport hop and would trip the per-request assertion below)
+    fe = Frontend(engine=make_engine(), n_patients=n_patients,
+                  runner=runner, cfg=FrontendConfig())
+    fe.warm(PROMPT_LEN)
+    prompts = make_prompts(n_lm)
+
+    saved = obs.get()
+    tel = obs.configure(enabled=True)
+    try:
+        async def amain() -> None:
+            host, port = await fe.start("127.0.0.1", 0)
+            client = await SocketClient.connect(host, port)
+            futs = []
+            for i in range(n_lm):
+                futs.append(await client.send_lm(
+                    uid=i, prompt=[int(t) for t in prompts[i]],
+                    max_new=max_new,
+                ))
+            for p in range(n_patients):
+                futs.append(await client.send_segment(
+                    patient=p, seq=0, urgent=(p == 0)
+                ))
+            for f in futs:
+                await asyncio.wait_for(f, 120.0)
+            await client.drain()
+            await client.close()
+            await fe.stop()
+
+        asyncio.run(amain())
+        events = tel.tracer.events()
+    finally:
+        obs.install(saved)
+
+    joined = lineage.assert_joined(events, min_hops=4)
+    for rid, hops in joined.items():
+        assert any(h.name.startswith("frontend/") for h in hops), (
+            rid, sorted({h.name for h in hops}),
+        )
+    summ = lineage.summarize(events)
+    samples = []
+    for rid in sorted(joined)[:n_samples]:
+        cp = lineage.critical_path(joined[rid])
+        cp["request_id"] = rid
+        samples.append(cp)
+    return {**summ, "min_hops_required": 4, "transport": "socket",
+            "samples": samples}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -224,9 +293,44 @@ def main() -> None:
           f"urgent_survived={stream['overload']['urgent_survived']}, "
           f"verdict={stream['overload']['verdict']}")
 
+    # frontend sweep: admission bucket pinned to the serve knee, loads
+    # offered through a real loopback socket (wall time)
+    knee_rate = float(serve["knee"].get("knee_rate") or capacity)
+
+    def make_frontend(fcfg):
+        fe = Frontend(engine=make_engine(), n_patients=8,
+                      runner=runner, cfg=fcfg)
+        fe.warm(PROMPT_LEN)
+        return fe
+
+    frontend = loadlab.sweep_frontend(
+        make_frontend,
+        make_prompts,
+        admission_rate_rps=knee_rate,
+        load_fractions=(0.25, 1.0, 3.0),
+        n_requests=24,
+        max_new=max_new,
+        n_patients=8,
+        segs_per_patient=3,
+        urgent_fraction=0.25,
+    )
+    fo = frontend["overload"]
+    to = frontend["transport_overhead"]
+    print(f"[load_sweep] frontend: admission@{knee_rate:.0f} req/s "
+          f"(serve knee), shed_curve="
+          f"{[(c['load_fraction'], round(c['shed_rate'], 2)) for c in frontend['shed_curve']]}, "
+          f"verdict={fo['verdict']} "
+          f"(retention {fo['throughput_retention']:.2f})")
+    print(f"[load_sweep] frontend transport: socket-inproc p99 "
+          f"{to['socket_minus_inproc_p99_s'] * 1e3:+.2f}ms at "
+          f"{to['load_fraction']}x")
+
     lin = lineage_sample(runner, make_engine, make_prompts,
                          max_new=max_new)
-    for name in ("serve", "stream"):
+    lin["frontend"] = frontend_lineage_sample(
+        make_engine, runner, make_prompts, max_new=max_new
+    )
+    for name in ("serve", "stream", "frontend"):
         print(f"[load_sweep] lineage[{name}]: "
               f"{lin[name]['requests']} requests joined, "
               f"{lin[name]['min_distinct_hops']}-"
@@ -238,6 +342,7 @@ def main() -> None:
         "n_host_devices": jax.device_count(),
         "serve": serve,
         "stream": stream,
+        "frontend": frontend,
         "lineage": lin,
         "telemetry": obs.telemetry_section(),
     }
@@ -272,10 +377,32 @@ def main() -> None:
     assert stream["slo"]["urgent_overload"]["met"], stream["slo"]
     assert stream["overload"]["urgent_survived"]
     assert stream["overload"]["never_dropped"]
-    # every sampled request joins across >= 3 subsystem hops
+    # frontend: graceful degradation at 3x the knee with exact
+    # terminal accounting, typed rejections only, and zero URGENT
+    # stream loss
+    assert fo["verdict"] == "graceful_degradation", fo
+    assert fo["accounting_exact"] and fo["typed_rejections_only"], fo
+    assert fo["urgent_survived"], fo
+    for p in frontend["points"]:
+        assert p["submitted"] == p["completed"] + p["rejected"], p
+        assert p["segments"]["urgent_not_enqueued"] == 0, p["segments"]
+        assert p["segments"]["dropped"] == 0, p["segments"]
+        if p["load_fraction"] <= 0.25:
+            # burst-8 bucket at a quarter of the knee: shedding here
+            # would mean the admission gate is mis-wired
+            assert p["rejected"] == 0, p
+        if p["load_fraction"] >= 3.0:
+            assert p["rejected"] > 0, p  # the gate actually engages
+    assert "socket_minus_inproc_p99_s" in to, to
+    # every sampled request joins across >= 3 subsystem hops (>= 4 for
+    # the frontend sample, which must also cross the transport)
     for name in ("serve", "stream"):
         assert lin[name]["requests"] > 0, lin[name]
         assert lin[name]["min_distinct_hops"] >= 3, lin[name]
+    flin = lin["frontend"]
+    assert flin["requests"] > 0, flin
+    assert flin["min_distinct_hops"] >= 4, flin
+    assert flin["requests_with_transport_hop"] == flin["requests"], flin
     t = rec["telemetry"]
     assert t["schema_version"] == obs.SCHEMA_VERSION and t["enabled"]
     print("[load_sweep] all assertions passed")

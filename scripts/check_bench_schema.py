@@ -15,6 +15,13 @@ Exits nonzero listing every violation. Checks per file:
   * telemetry["schema_version"] == repro.obs.SCHEMA_VERSION;
   * telemetry was enabled and the shared sub-sections exist
     (counters / gauges / histograms / recompiles).
+
+Per-benchmark sections (keyed on the record's "benchmark" name):
+  * load_sweep must carry the serving-frontend socket sweep: a
+    "frontend" dict with transport == "socket", a numeric admission
+    rate, a non-empty points list, the overload verdict block, and the
+    socket-vs-inproc transport_overhead pairing — the loopback-socket
+    sweep silently falling out of the bench fails here.
 """
 
 from __future__ import annotations
@@ -23,6 +30,39 @@ import json
 import sys
 
 REQUIRED_KEYS = ("counters", "gauges", "histograms", "recompiles")
+
+# required (key, type) pairs of the load_sweep record's frontend
+# (loopback-socket) section — `loadlab.sweep_frontend` output
+FRONTEND_KEYS = (
+    ("transport", str),
+    ("admission_rate_rps", (int, float)),
+    ("points", list),
+    ("shed_curve", list),
+    ("overload", dict),
+    ("transport_overhead", dict),
+)
+
+
+def _check_frontend(path: str, rec: dict) -> list[str]:
+    fe = rec.get("frontend")
+    if not isinstance(fe, dict):
+        return [f"{path}: load_sweep record has no 'frontend' "
+                f"(loopback-socket sweep) section"]
+    errors = []
+    for k, typ in FRONTEND_KEYS:
+        if not isinstance(fe.get(k), typ):
+            errors.append(f"{path}: frontend section missing {k!r}")
+    if fe.get("transport") != "socket":
+        errors.append(
+            f"{path}: frontend transport {fe.get('transport')!r}, "
+            f"expected 'socket' (the committed record must price the "
+            f"real wire)"
+        )
+    if isinstance(fe.get("points"), list) and not fe["points"]:
+        errors.append(f"{path}: frontend points list is empty")
+    if not (fe.get("overload") or {}).get("verdict"):
+        errors.append(f"{path}: frontend overload verdict missing")
+    return errors
 
 
 def check_file(path: str, schema_version: int) -> list[str]:
@@ -46,6 +86,8 @@ def check_file(path: str, schema_version: int) -> list[str]:
     for k in REQUIRED_KEYS:
         if not isinstance(tel.get(k), dict):
             errors.append(f"{path}: telemetry missing {k!r}")
+    if rec.get("benchmark") == "load_sweep":
+        errors.extend(_check_frontend(path, rec))
     return errors
 
 

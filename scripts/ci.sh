@@ -70,20 +70,30 @@ python -m pytest -x -q ${PYTEST_ARGS+"${PYTEST_ARGS[@]}"}
 #  * load_sweep — the open-loop load lab: offered-load sweeps for both
 #    engines with latency from intended arrivals; asserts knee located,
 #    coordinated-omission guard, URGENT-class SLO survival under
-#    overload, and every sampled request's lineage joining across >= 3
-#    subsystem hops.
+#    overload, graceful frontend degradation at 3x the knee (typed
+#    shedding, exact accounting, zero URGENT loss), and every sampled
+#    request's lineage joining across >= 3 subsystem hops (>= 4 with
+#    the transport hop for the frontend sample).
+#  * frontend sweep — the async serving frontend end-to-end over a real
+#    loopback socket via the launcher: admission pinned to measured
+#    capacity, one sub-knee + one 3x-overload offered-load point; the
+#    emitted trace must carry the transport hops (validated below).
 python benchmarks/stream_throughput.py --smoke --out /tmp/BENCH_stream_ci.json --trace-out /tmp/ci_trace_stream
 python benchmarks/decode_throughput.py --smoke --out /tmp/BENCH_decode_ci.json --trace-out /tmp/ci_trace_decode
 python benchmarks/dist_compression.py --smoke --out /tmp/BENCH_dist_ci.json --trace-out /tmp/ci_trace_dist
 python benchmarks/load_sweep.py --smoke --out /tmp/BENCH_load_ci.json --trace-out /tmp/ci_trace_load
 python examples/serve_lm.py --smoke --trace-out /tmp/ci_trace
+python -m repro.launch.serve --arch qwen3-8b --reduced --batch 4 \
+  --prompt-len 6 --max-new 8 --patients 8 --frontend-sweep \
+  --load-fractions 0.25,3.0 --load-requests 16 \
+  --trace-out /tmp/ci_trace_frontend
 
 # Every emitted trace is validated line-by-line against the
 # repro.obs.trace event schema and its Chrome/Perfetto export checked
 # well-formed (exits nonzero on empty/malformed) — not just the
 # serve_lm smoke.
 for t in /tmp/ci_trace /tmp/ci_trace_stream /tmp/ci_trace_decode \
-         /tmp/ci_trace_dist /tmp/ci_trace_load; do
+         /tmp/ci_trace_dist /tmp/ci_trace_load /tmp/ci_trace_frontend; do
   python -m repro.obs.trace "$t.jsonl" "$t.json"
 done
 

@@ -9,6 +9,12 @@ Greedy by default; --temperature enables per-request folded-key
 sampling (reproducible for a fixed --seed, optionally top-k-truncated)
 on both the single-device and mesh-sharded paths.
 
+Async serving frontend (`repro.serve.frontend`): --listen HOST:PORT
+serves the length-prefixed JSON transport with admission control at
+--admission-rate; --connect HOST:PORT drives it open-loop from another
+process; --frontend-sweep runs the loopback-socket offered-load sweep
+(shed-rate curve, URGENT survival, graceful-degradation verdict).
+
 Sharded multi-device decode (`repro.serve.sharded`): pass --mesh D or
 DxM to place the decode cache/params on a ("data", "model") mesh; on a
 CPU container force host devices first:
@@ -102,29 +108,8 @@ def serve_load_sweep(args) -> None:
 
     from repro.obs import loadlab
 
-    cfg = configs.reduced(args.arch) if args.reduced else configs.get(
-        args.arch
-    )
-    max_seq = args.prompt_len + args.max_new + 2
-    model = api.build_model(cfg, tp=1, max_seq=max_seq)
+    _, make_engine, make_prompts = _build_lm_engine(args)
     key = jax.random.PRNGKey(args.seed)
-    params = model.init(key)
-    mesh = make_serving_mesh(args.mesh) if args.mesh else None
-
-    def make_engine():
-        if mesh is not None:
-            return SH.ShardedEngine(
-                model, params, batch_size=args.batch, mesh=mesh
-            )
-        return E.Engine(model, params, batch_size=args.batch)
-
-    def make_prompts(n):
-        toks = jax.random.randint(
-            jax.random.fold_in(key, 2), (n, args.prompt_len), 0,
-            cfg.vocab,
-        )
-        return [jnp.asarray(toks[i], jnp.int32) for i in range(n)]
-
     cap = loadlab.run_serve_point(
         make_engine,
         make_prompts(max(2 * args.batch, 8)),
@@ -175,6 +160,189 @@ def serve_load_sweep(args) -> None:
         print(_json.dumps(out, indent=1, default=float))
 
 
+def _hostport(s: str) -> tuple[str, int]:
+    host, _, port = s.rpartition(":")
+    return host or "127.0.0.1", int(port)
+
+
+def _build_lm_engine(args):
+    cfg = configs.reduced(args.arch) if args.reduced else configs.get(
+        args.arch
+    )
+    max_seq = args.prompt_len + args.max_new + 2
+    model = api.build_model(cfg, tp=1, max_seq=max_seq)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+    mesh = make_serving_mesh(args.mesh) if args.mesh else None
+
+    def make_engine():
+        if mesh is not None:
+            return SH.ShardedEngine(
+                model, params, batch_size=args.batch, mesh=mesh
+            )
+        return E.Engine(model, params, batch_size=args.batch)
+
+    def make_prompts(n):
+        toks = jax.random.randint(
+            jax.random.fold_in(key, 2), (n, args.prompt_len), 0,
+            cfg.vocab,
+        )
+        return [jnp.asarray(toks[i], jnp.int32) for i in range(n)]
+
+    return cfg, make_engine, make_prompts
+
+
+def serve_listen(args) -> None:
+    """Serve LM requests over the length-prefixed JSON socket
+    transport (`repro.serve.frontend`), with admission control at
+    --admission-rate (shed with typed rejections past it)."""
+    import asyncio
+
+    from repro.serve.frontend import Frontend, FrontendConfig
+
+    _, make_engine, _ = _build_lm_engine(args)
+    fe = Frontend(
+        engine=make_engine(),
+        cfg=FrontendConfig(admission_rate_rps=args.admission_rate),
+    )
+    fe.warm(args.prompt_len)
+    host, port = _hostport(args.listen)
+
+    async def amain() -> None:
+        bound = await fe.start(host, port)
+        print(f"[serve] frontend listening on {bound[0]}:{bound[1]} "
+              f"(admission rate: "
+              f"{args.admission_rate or 'unbounded'})")
+        try:
+            await asyncio.Event().wait()
+        finally:
+            await fe.stop()
+
+    try:
+        asyncio.run(amain())
+    except KeyboardInterrupt:
+        print("[serve] frontend stopped")
+
+
+def serve_connect(args) -> None:
+    """Open-loop socket client: offer --load-requests LM requests at
+    --offered-rate req/s and report terminal outcomes."""
+    import asyncio
+
+    from repro.obs import loadlab
+    from repro.serve.frontend import SocketClient
+
+    host, port = _hostport(args.connect)
+    key = jax.random.PRNGKey(args.seed)
+    intended = loadlab.arrival_times(
+        key, 0, rate_hz=args.offered_rate, n=args.load_requests,
+        process=args.arrival_process,
+    )
+
+    async def amain() -> dict:
+        import time
+
+        client = await SocketClient.connect(host, port)
+        futs = []
+        t0 = time.perf_counter()
+        for i in range(args.load_requests):
+            delay = intended[i] - (time.perf_counter() - t0)
+            if delay > 0:
+                await asyncio.sleep(delay)
+            prompt = [int(x) for x in jax.random.randint(
+                jax.random.fold_in(key, 100 + i),
+                (args.prompt_len,), 0, 1000,
+            )]
+            futs.append(await client.send_lm(
+                uid=i, prompt=prompt, max_new=args.max_new
+            ))
+        results = [await asyncio.wait_for(f, 120.0) for f in futs]
+        await client.close()
+        return results
+
+    results = asyncio.run(amain())
+    done = sum(1 for r in results if r["status"] == "completed")
+    reasons: dict = {}
+    for r in results:
+        if r["status"] == "rejected":
+            reasons[r["reason"]] = reasons.get(r["reason"], 0) + 1
+    print(f"[serve] {args.load_requests} offered at "
+          f"{args.offered_rate:.1f} req/s -> {done} completed, "
+          f"{len(results) - done} rejected {reasons or ''}")
+
+
+def serve_frontend_sweep(args) -> None:
+    """Loopback-socket offered-load sweep through the frontend:
+    measure engine capacity closed-loop (or take --admission-rate),
+    then offer --load-fractions of it over a real socket with active
+    admission control — shed-rate curve, URGENT segment survival, and
+    the overload verdict (see `loadlab.sweep_frontend`)."""
+    import json as _json
+
+    from repro.core import compiler, vadetect
+    from repro.obs import loadlab
+    from repro.serve.frontend import Frontend
+    from repro.stream.runner import FleetRunner
+
+    _, make_engine, make_prompts = _build_lm_engine(args)
+    rate = args.admission_rate
+    if rate is None:
+        rate = loadlab.run_serve_point(
+            make_engine,
+            make_prompts(max(2 * args.batch, 8)),
+            rate_rps=1e5,
+            max_new=args.max_new,
+            key=jax.random.PRNGKey(args.seed + 3),
+        )["achieved_rps"]
+        print(f"[serve] closed-loop capacity ~{rate:.0f} req/s -> "
+              f"admission rate")
+    runner = FleetRunner(
+        compiler.compile_model(
+            vadetect.init(jax.random.PRNGKey(args.seed))
+        )
+    )
+
+    def make_frontend(fcfg):
+        fe = Frontend(engine=make_engine(), n_patients=args.patients,
+                      runner=runner, cfg=fcfg)
+        fe.warm(args.prompt_len)
+        return fe
+
+    out = loadlab.sweep_frontend(
+        make_frontend,
+        make_prompts,
+        admission_rate_rps=rate,
+        load_fractions=tuple(
+            float(f) for f in args.load_fractions.split(",")
+        ),
+        n_requests=args.load_requests,
+        max_new=args.max_new,
+        seed=args.seed,
+        n_patients=args.patients,
+        process=args.arrival_process,
+    )
+    for p in out["points"]:
+        print(
+            f"[serve]   {p['load_fraction']:>5.2f}x  "
+            f"offered {p['offered_load']:8.1f}/s  "
+            f"completed {p['completed']:3d}  "
+            f"shed {p['shed_rate']:5.1%}  "
+            f"p99 {(p['p99_s'] or float('nan')) * 1e3:7.1f}ms  "
+            f"seg-deferred {p['segments']['deferred']}"
+        )
+    ov = out["overload"]
+    print(f"[serve] frontend verdict = {ov['verdict']} "
+          f"(accounting_exact={ov['accounting_exact']}, "
+          f"urgent_survived={ov['urgent_survived']})")
+    to = out.get("transport_overhead")
+    if to:
+        print(f"[serve] socket - inproc p99: "
+              f"{to['socket_minus_inproc_p99_s'] * 1e3:.2f}ms at "
+              f"{to['load_fraction']}x")
+    if args.json:
+        print(_json.dumps(out, indent=1, default=float))
+
+
 def serve_va(args) -> None:
     from repro.configs import va_cnn
     from repro.core import compiler, vadetect
@@ -220,6 +388,24 @@ def main() -> None:
     ap.add_argument("--load-sweep", action="store_true",
                     help="run the open-loop offered-load sweep "
                          "(repro.obs.loadlab) instead of one batch")
+    ap.add_argument("--frontend-sweep", action="store_true",
+                    help="offered-load sweep through the async "
+                         "serving frontend over a loopback socket, "
+                         "with knee-aware admission control")
+    ap.add_argument("--listen", default=None, metavar="HOST:PORT",
+                    help="serve LM requests over the frontend's "
+                         "length-prefixed JSON socket transport")
+    ap.add_argument("--connect", default=None, metavar="HOST:PORT",
+                    help="open-loop socket client against a --listen "
+                         "frontend (sends --load-requests at "
+                         "--offered-rate)")
+    ap.add_argument("--offered-rate", type=float, default=50.0,
+                    help="with --connect: offered load in req/s")
+    ap.add_argument("--admission-rate", type=float, default=None,
+                    help="admission-control rate in req/s for "
+                         "--listen/--frontend-sweep (default: "
+                         "unbounded for --listen; measured capacity "
+                         "for --frontend-sweep)")
     ap.add_argument("--load-fractions",
                     default="0.25,0.5,0.75,1.0,2.0",
                     help="offered load as fractions of measured "
@@ -242,11 +428,21 @@ def main() -> None:
                  "--temperature too (e.g. --temperature 1.0)")
     if args.trace_out:
         obs.configure(enabled=True)
+    if (args.frontend_sweep or args.listen) and args.arch == "va-cnn":
+        ap.error("the serving frontend fronts the LM slot engine; "
+                 "for the stream side use repro.launch.stream "
+                 "--listen/--connect")
     if args.load_sweep:
         if args.arch == "va-cnn":
             ap.error("--load-sweep drives the LM slot engine; for the "
                      "fleet sweep use repro.launch.stream --load-sweep")
         serve_load_sweep(args)
+    elif args.frontend_sweep:
+        serve_frontend_sweep(args)
+    elif args.listen:
+        serve_listen(args)
+    elif args.connect:
+        serve_connect(args)
     elif args.arch == "va-cnn":
         serve_va(args)
     else:

@@ -102,6 +102,94 @@ def stream_load_sweep(args, program, buckets, mesh) -> None:
     )
 
 
+def stream_listen(args, program, buckets, mesh) -> None:
+    """Accept patient segments over the serving-frontend socket
+    transport (`repro.serve.frontend`): ROUTINE segments are deferred
+    (never dropped) past --stream-rate, URGENT always pass and flip
+    the scheduler's preemption bitmap."""
+    import asyncio
+
+    from repro.serve.frontend import Frontend, FrontendConfig
+    from repro.stream import FleetRunner
+
+    host, _, port = args.listen.rpartition(":")
+    fe = Frontend(
+        n_patients=args.patients,
+        runner=FleetRunner(program, path=args.path, mesh=mesh),
+        cfg=FrontendConfig(
+            stream_rate_rps=args.stream_rate,
+            stream_buckets=buckets,
+            stream_max_wait_s=args.max_wait,
+        ),
+    )
+    fe.warm()
+
+    async def amain() -> None:
+        bound = await fe.start(host or "127.0.0.1", int(port))
+        print(f"[stream] frontend listening on "
+              f"{bound[0]}:{bound[1]} ({args.patients} patients, "
+              f"routine rate: {args.stream_rate or 'unbounded'})")
+        try:
+            await asyncio.Event().wait()
+        finally:
+            await fe.stop()
+
+    try:
+        asyncio.run(amain())
+    except KeyboardInterrupt:
+        print("[stream] frontend stopped")
+
+
+def stream_connect(args) -> None:
+    """Open-loop socket client: offer --patients x --segments patient
+    segments at --offered-rate seg/s (first --urgent-fraction of
+    patients URGENT), then drain and report the ack ledger."""
+    import asyncio
+    import time
+
+    from repro.obs import loadlab
+    from repro.serve.frontend import SocketClient
+
+    host, _, port = args.connect.rpartition(":")
+    n_urgent = max(1, int(round(args.urgent_fraction * args.patients)))
+    total = args.patients * args.segments
+    intended = loadlab.arrival_times(
+        jax.random.PRNGKey(args.seed), 0, rate_hz=args.offered_rate,
+        n=total, process=args.arrival_process,
+    )
+
+    async def amain():
+        client = await SocketClient.connect(host or "127.0.0.1",
+                                            int(port))
+        futs = []
+        t0 = time.perf_counter()
+        for i in range(total):
+            delay = intended[i] - (time.perf_counter() - t0)
+            if delay > 0:
+                await asyncio.sleep(delay)
+            p, s = i % args.patients, i // args.patients
+            futs.append(await client.send_segment(
+                patient=p, seq=s, urgent=p < n_urgent
+            ))
+        acks = [await asyncio.wait_for(f, 60.0) for f in futs]
+        stats = (await client.drain()).get("stats", {})
+        await client.close()
+        return acks, stats
+
+    acks, stats = asyncio.run(amain())
+    by = {}
+    for a in acks:
+        by[a["status"]] = by.get(a["status"], 0) + 1
+    print(f"[stream] {total} segments offered at "
+          f"{args.offered_rate:.1f}/s ({n_urgent} urgent patients): "
+          f"acks {by}")
+    enq = stats.get("sched_enqueued_total", 0)
+    packed = stats.get("sched_packed_total", 0)
+    print(f"[stream] drained: enqueued={enq} packed={packed} "
+          f"left-behind={enq - packed} "
+          f"deferred={stats.get('seg_deferred', 0)}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--patients", type=int, default=256)
@@ -135,6 +223,19 @@ def main() -> None:
     ap.add_argument("--arrival-process", default="poisson",
                     choices=["poisson", "trace"],
                     help="interarrival process for --load-sweep")
+    ap.add_argument("--listen", default=None, metavar="HOST:PORT",
+                    help="accept patient segments over the serving "
+                         "frontend's socket transport")
+    ap.add_argument("--connect", default=None, metavar="HOST:PORT",
+                    help="open-loop socket client against a --listen "
+                         "frontend (sends patients x segments at "
+                         "--offered-rate)")
+    ap.add_argument("--offered-rate", type=float, default=100.0,
+                    help="with --connect: offered load in segments/s")
+    ap.add_argument("--stream-rate", type=float, default=None,
+                    help="with --listen: ROUTINE admission rate in "
+                         "segments/s (past it segments defer, never "
+                         "drop; default unbounded)")
     ap.add_argument("--json", action="store_true",
                     help="dump the full result record as JSON")
     ap.add_argument("--trace-out", default=None, metavar="PREFIX",
@@ -147,10 +248,16 @@ def main() -> None:
         # probe
         obs.configure(enabled=True)
 
+    if args.connect:
+        stream_connect(args)
+        return
     buckets = tuple(sorted(int(b) for b in args.buckets.split(",")))
     mesh = make_data_mesh(args.devices)
     params = vadetect.init(jax.random.PRNGKey(args.seed))
     program = compiler.compile_model(params)
+    if args.listen:
+        stream_listen(args, program, buckets, mesh)
+        return
     if args.load_sweep:
         stream_load_sweep(args, program, buckets, mesh)
         return

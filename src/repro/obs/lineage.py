@@ -17,6 +17,13 @@ Hop vocabularies (the instrumented paths):
   serve   submit → admit (prefill, seat children) → tick/decode → finish
   stream  enqueue → pack → flush (classify, vote children)
 
+When requests arrive through the serving frontend (`serve.frontend`),
+the id is minted CLIENT-side and carried across the wire, and the
+transport adds hops of its own: `frontend/ingress` before the entry
+hop and `frontend/reply` (LM terminal reply, after `serve/finish`) or
+`frontend/ack` (segment admission ack) — so a joined lineage spans the
+socket hop, not just the in-process path.
+
 `join` inverts the tagging into {request_id: [hop, ...]} with hops in
 timestamp order; `critical_path` folds one request's hops into the
 queue-wait / compute / seating attribution the load lab reports, and
@@ -113,8 +120,11 @@ _PHASE_OF = {
     "stream/classify": "classify",
     "stream/vote": "vote",
 }
-_ENTRY_HOPS = ("serve/submit", "stream/enqueue")
-_EXIT_HOPS = ("serve/finish",)
+_ENTRY_HOPS = ("frontend/ingress", "serve/submit", "stream/enqueue")
+# `frontend/reply` is the LM terminal reply (strictly after
+# serve/finish); the segment ack is deliberately NOT an exit hop — it
+# precedes the segment's stream hops in wall time
+_EXIT_HOPS = ("serve/finish", "frontend/reply")
 
 
 def critical_path(hops: list[Hop]) -> dict:
@@ -172,12 +182,17 @@ def summarize(events: Iterable[dict]) -> dict:
     if not lineages:
         return {"requests": 0}
     distinct = [len({h.name for h in hops}) for hops in lineages.values()]
+    with_transport = sum(
+        1 for hops in lineages.values()
+        if any(h.name.startswith("frontend/") for h in hops)
+    )
     return {
         "requests": len(lineages),
         "min_distinct_hops": min(distinct),
         "max_distinct_hops": max(distinct),
         "mean_hops": sum(len(h) for h in lineages.values())
         / len(lineages),
+        "requests_with_transport_hop": with_transport,
     }
 
 

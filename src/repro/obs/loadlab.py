@@ -733,6 +733,399 @@ def sweep_stream(
 
 
 # ---------------------------------------------------------------------------
+# frontend sweep (wall time, through the serving transport)
+# ---------------------------------------------------------------------------
+
+
+async def _frontend_point_async(
+    make_frontend,
+    prompts,
+    *,
+    rate_rps: float,
+    max_new: int,
+    key,
+    transport: str,
+    n_patients: int,
+    segs_per_patient: int,
+    urgent_patients,
+    seg_deadline_rel_s: float,
+    process: str,
+    max_wall_s: float,
+) -> dict:
+    import asyncio
+    import time
+
+    from repro.serve.frontend import InProcClient, SocketClient
+
+    fe = make_frontend()
+    addr = await fe.start(
+        host="127.0.0.1" if transport == "socket" else None, port=0
+    )
+    client = (
+        await SocketClient.connect(*addr)
+        if transport == "socket"
+        else InProcClient(fe)
+    )
+    n = len(prompts)
+    intended = arrival_times(
+        key, 0, rate_hz=rate_rps, n=n, process=process
+    )
+    horizon = float(intended[-1])
+    # per-patient segment schedules over the same wall horizon, on
+    # fold_in keys disjoint from the LM schedule's uid
+    seg_events = []
+    if n_patients > 0 and segs_per_patient > 0:
+        per_rate = segs_per_patient / max(horizon, 1e-3)
+        for p in range(n_patients):
+            ts = arrival_times(
+                key, 10_000 + p, rate_hz=per_rate,
+                n=segs_per_patient, process=process,
+            )
+            seg_events.extend(
+                (float(t), p, s, bool(urgent_patients[p]))
+                for s, t in enumerate(ts)
+            )
+        seg_events.sort()
+    t_send = np.zeros(n)
+    lm_futs: list = [None] * n
+    seg_futs: list = []
+    t0 = time.perf_counter()
+
+    async def drive_lm() -> None:
+        for i in range(n):
+            delay = intended[i] - (time.perf_counter() - t0)
+            if delay > 0:
+                await asyncio.sleep(delay)
+            lm_futs[i] = await client.send_lm(
+                uid=i, prompt=[int(x) for x in prompts[i]],
+                max_new=max_new,
+            )
+            t_send[i] = time.perf_counter() - t0
+
+    async def drive_segs() -> None:
+        for t, p, s, urg in seg_events:
+            delay = t - (time.perf_counter() - t0)
+            if delay > 0:
+                await asyncio.sleep(delay)
+            seg_futs.append((p, s, urg, await client.send_segment(
+                p, s, deadline_rel_s=seg_deadline_rel_s, urgent=urg,
+            )))
+
+    try:
+        # both generators are truly open-loop: they send on schedule
+        # whether or not replies have come back
+        await asyncio.wait_for(
+            asyncio.gather(drive_lm(), drive_segs()), max_wall_s
+        )
+        results = [
+            await asyncio.wait_for(f, max_wall_s) for f in lm_futs
+        ]
+        acks = [
+            (p, s, urg, await asyncio.wait_for(f, max_wall_s))
+            for p, s, urg, f in seg_futs
+        ]
+        stats = (await client.drain(timeout=max_wall_s))["stats"]
+    finally:
+        await client.close()
+        await fe.stop()
+
+    completed = [r for r in results if r["status"] == "completed"]
+    rejected = [r for r in results if r["status"] == "rejected"]
+    by_reason: dict[str, int] = {}
+    for r in rejected:
+        by_reason[r["reason"]] = by_reason.get(r["reason"], 0) + 1
+    done_idx = [
+        i for i, r in enumerate(results) if r["status"] == "completed"
+    ]
+    from_intended = np.asarray([
+        results[i]["_t_recv"] - t0 - intended[i] for i in done_idx
+    ])
+    from_send = np.asarray([
+        results[i]["_t_recv"] - t0 - t_send[i] for i in done_idx
+    ])
+    lat = tail_summary(from_intended)
+    span = (
+        max(
+            results[i]["_t_recv"] - t0 for i in done_idx
+        ) - float(intended[0])
+        if done_idx else None
+    )
+    urgent_bad = sum(
+        1 for _, _, urg, a in acks
+        if urg and a["status"] != "enqueued"
+    )
+    deferred = sum(1 for *_, a in acks if a["status"] == "deferred")
+    seg_rejected = sum(
+        1 for *_, a in acks if a["status"] == "rejected"
+    )
+    # after a drain every enqueued segment must have been packed —
+    # anything else is a silent scheduler drop
+    dropped = int(
+        stats.get("sched_enqueued_total", 0)
+        - stats.get("sched_packed_total", 0)
+    )
+    return {
+        "transport": transport,
+        "offered_load": float(rate_rps),
+        "n_requests": int(n),
+        "submitted": int(n),
+        "completed": len(completed),
+        "rejected": len(rejected),
+        "rejected_by_reason": by_reason,
+        "shed_rate": len(rejected) / n,
+        "accounting_exact": len(completed) + len(rejected) == n,
+        "completed_rps": (
+            len(completed) / max(span, 1e-9) if span else 0.0
+        ),
+        "latency": lat,
+        "p50_s": lat["p50_s"],
+        "p99_s": lat["p99_s"],
+        "p999_s": lat["p999_s"],
+        "segments": {
+            "sent": len(acks),
+            "urgent_sent": sum(1 for *_, u, _a in acks if u),
+            "deferred": deferred,
+            "rejected": seg_rejected,
+            "urgent_not_enqueued": urgent_bad,
+            "dropped": dropped,
+        },
+        "frontend_stats": stats,
+        "_raw": {
+            "from_intended": from_intended,
+            "from_send": from_send,
+        },
+    }
+
+
+def run_frontend_point(
+    make_frontend,
+    prompts,
+    *,
+    rate_rps: float,
+    max_new: int,
+    key,
+    transport: str = "socket",
+    n_patients: int = 0,
+    segs_per_patient: int = 0,
+    urgent_patients=None,
+    seg_deadline_rel_s: float = 0.5,
+    process: str = "poisson",
+    max_wall_s: float = 120.0,
+) -> dict:
+    """One offered-load point through the serving frontend
+    (`serve.frontend`): an open-loop asyncio client sends LM requests
+    at `rate_rps` (intended arrival schedule generated up front) and
+    per-patient segment arrivals over the same horizon, over a
+    loopback socket or the in-process transport. Every request's
+    terminal outcome is collected — completed XOR an explicit typed
+    rejection — along with shed/deferral/urgent accounting from the
+    acks and the frontend's drain stats.
+
+    Unlike `run_serve_point`, the generator here is a separate async
+    task from the server, so sends stay on schedule even at overload:
+    the queueing excess lives server-side and shows up as shed rate
+    and reply latency, not send lag. The CO twins (`from_intended` vs
+    `from_send`) therefore agree to scheduler jitter — recorded, but
+    the strict-inequality overload check is not applicable on this
+    path."""
+    import asyncio
+
+    if urgent_patients is None:
+        urgent_patients = np.zeros(max(n_patients, 1), bool)
+    return asyncio.run(_frontend_point_async(
+        make_frontend,
+        prompts,
+        rate_rps=rate_rps,
+        max_new=max_new,
+        key=key,
+        transport=transport,
+        n_patients=n_patients,
+        segs_per_patient=segs_per_patient,
+        urgent_patients=urgent_patients,
+        seg_deadline_rel_s=seg_deadline_rel_s,
+        process=process,
+        max_wall_s=max_wall_s,
+    ))
+
+
+def sweep_frontend(
+    make_frontend,
+    make_prompts,
+    *,
+    admission_rate_rps: float,
+    load_fractions: Sequence[float] = (0.25, 1.0, 3.0),
+    n_requests: int = 24,
+    max_new: int = 8,
+    seed: int = 0,
+    transport: str = "socket",
+    n_patients: int = 8,
+    segs_per_patient: int = 3,
+    urgent_fraction: float = 0.25,
+    seg_deadline_rel_s: float = 0.5,
+    process: str = "poisson",
+    compare_transports: bool = True,
+) -> dict:
+    """Offered-load sweep THROUGH the frontend transport, with active
+    admission control at `admission_rate_rps` (wire it to
+    `sweep_serve`'s measured knee). `make_frontend(cfg)` builds a
+    fresh, warmed frontend from the per-sweep `FrontendConfig`.
+
+    The verdict is judged on robust, deterministic signals — exact
+    terminal accounting (submitted == completed + rejected, every shed
+    an explicit typed rejection), URGENT segment survival (never
+    deferred, never shed, never dropped, at any load), and completed-
+    throughput retention at overload vs the best sub-knee point —
+    rather than on wall-clock latency ratios, which a noisy host can
+    fake either way. Tail latencies and the shed-rate curve past the
+    knee are recorded alongside for the report."""
+    import jax
+
+    from repro.serve.frontend import FrontendConfig
+
+    n_urgent = max(1, int(round(urgent_fraction * n_patients)))
+    urgent_patients = np.zeros(n_patients, bool)
+    urgent_patients[:n_urgent] = True
+    # ROUTINE segment bucket: sized so the 1.0x point's segment rate
+    # is exactly at the admission rate — overload points defer routine
+    # traffic, demonstrating shed-vs-defer policy divergence
+    seg_rate = (
+        n_patients * segs_per_patient * admission_rate_rps
+        / max(n_requests, 1)
+    )
+    fcfg = FrontendConfig(
+        lm_queue_limit=max(4 * n_requests, 64),
+        admission_rate_rps=admission_rate_rps,
+        admission_burst=8.0,
+        stream_rate_rps=seg_rate if n_patients > 0 else None,
+        stream_burst=4.0,
+        stream_buckets=(4, 8),
+        stream_max_wait_s=0.02,
+        seg_deadline_rel_s=seg_deadline_rel_s,
+    )
+    key = jax.random.PRNGKey(seed)
+    points = []
+    for j, frac in enumerate(sorted(load_fractions)):
+        pt = run_frontend_point(
+            lambda: make_frontend(fcfg),
+            make_prompts(n_requests),
+            rate_rps=max(frac * admission_rate_rps, 1e-3),
+            max_new=max_new,
+            key=jax.random.fold_in(key, j),
+            transport=transport,
+            n_patients=n_patients,
+            segs_per_patient=segs_per_patient,
+            urgent_patients=urgent_patients,
+            seg_deadline_rel_s=seg_deadline_rel_s,
+            process=process,
+        )
+        pt["load_fraction"] = float(frac)
+        points.append(pt)
+    # CO twins at the highest-load point: the async generator sends on
+    # schedule, so intended >= send holds but the overload strictness
+    # check does not apply (see run_frontend_point)
+    worst = max(points, key=lambda p: p["offered_load"])
+    guard = (
+        co_guard(
+            worst["_raw"]["from_intended"],
+            worst["_raw"]["from_send"],
+            saturated=False,
+        )
+        if worst["_raw"]["from_intended"].size
+        else None
+    )
+    for p in points:
+        del p["_raw"]
+    overload = [p for p in points if p["load_fraction"] > 1.0]
+    sub = [p for p in points if p["load_fraction"] <= 1.0]
+    accounting_exact = all(p["accounting_exact"] for p in points)
+    urgent_ok = all(
+        p["segments"]["urgent_not_enqueued"] == 0
+        and p["segments"]["dropped"] == 0
+        for p in points
+    )
+    typed_only = all(
+        sum(p["rejected_by_reason"].values()) == p["rejected"]
+        for p in points
+    )
+    retention = None
+    if overload:
+        ref = max(
+            (p["completed_rps"] for p in sub), default=None
+        ) or admission_rate_rps
+        retention = min(
+            p["completed_rps"] for p in overload
+        ) / max(ref, 1e-9)
+    verdict = "graceful_degradation"
+    if not (accounting_exact and urgent_ok and typed_only):
+        verdict = "queue_collapse"
+    elif retention is not None and retention < 0.5:
+        verdict = "queue_collapse"
+    out = {
+        "engine": "frontend",
+        "timebase": "wall",
+        "transport": transport,
+        "admission_rate_rps": float(admission_rate_rps),
+        "admission_burst": float(fcfg.admission_burst),
+        "stream_rate_rps": fcfg.stream_rate_rps,
+        "n_patients": int(n_patients),
+        "urgent_patients": int(n_urgent),
+        "points": points,
+        "shed_curve": [
+            {"load_fraction": p["load_fraction"],
+             "shed_rate": p["shed_rate"]}
+            for p in points
+        ],
+        "coordinated_omission_guard": guard,
+        "overload": {
+            "verdict": verdict,
+            "accounting_exact": accounting_exact,
+            "urgent_survived": urgent_ok,
+            "typed_rejections_only": typed_only,
+            "throughput_retention": retention,
+        },
+    }
+    if compare_transports and sub:
+        # matched point on the other transport: the in-process client
+        # enters the same handler with no socket hop, so the tail delta
+        # prices the transport itself
+        base = min(sub, key=lambda p: p["load_fraction"])
+        other = "inproc" if transport == "socket" else "socket"
+        twin = run_frontend_point(
+            lambda: make_frontend(fcfg),
+            make_prompts(n_requests),
+            rate_rps=base["offered_load"],
+            max_new=max_new,
+            key=jax.random.fold_in(key, 0),  # same schedule as point 0
+            transport=other,
+            n_patients=n_patients,
+            segs_per_patient=segs_per_patient,
+            urgent_patients=urgent_patients,
+            seg_deadline_rel_s=seg_deadline_rel_s,
+            process=process,
+        )
+        del twin["_raw"]
+        pair = {transport: base, other: twin}
+        out["transport_overhead"] = {
+            "load_fraction": base["load_fraction"],
+            "p50_s": {
+                t: pair[t]["p50_s"] for t in pair
+            },
+            "p99_s": {
+                t: pair[t]["p99_s"] for t in pair
+            },
+            "socket_minus_inproc_p50_s": (
+                (pair["socket"]["p50_s"] or 0.0)
+                - (pair["inproc"]["p50_s"] or 0.0)
+            ),
+            "socket_minus_inproc_p99_s": (
+                (pair["socket"]["p99_s"] or 0.0)
+                - (pair["inproc"]["p99_s"] or 0.0)
+            ),
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
 # CLI: render the HTML report
 # ---------------------------------------------------------------------------
 

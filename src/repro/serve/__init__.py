@@ -1,8 +1,9 @@
 """Serving substrate: batched LM engine (single-device + mesh-sharded,
-batched prefill admission with per-slot cache scatter) and the paper's
+batched prefill admission with per-slot cache scatter), the async
+transport frontend with knee-aware admission control, and the paper's
 VA diagnosis service."""
 
-from repro.serve import engine, seating, sharded, va_service
+from repro.serve import engine, frontend, seating, sharded, va_service
 from repro.serve.engine import (
     EncDecUnsupportedError,
     Engine,
@@ -10,6 +11,13 @@ from repro.serve.engine import (
     generate,
     request_key,
     sample_tokens,
+)
+from repro.serve.frontend import (
+    Frontend,
+    FrontendConfig,
+    InProcClient,
+    SocketClient,
+    TokenBucket,
 )
 from repro.serve.seating import gather_slots, scatter_slots
 from repro.serve.sharded import (
@@ -22,12 +30,18 @@ from repro.serve.sharded import (
 
 __all__ = [
     "engine",
+    "frontend",
     "seating",
     "sharded",
     "va_service",
     "EncDecUnsupportedError",
     "Engine",
+    "Frontend",
+    "FrontendConfig",
+    "InProcClient",
     "Request",
+    "SocketClient",
+    "TokenBucket",
     "generate",
     "request_key",
     "sample_tokens",

@@ -193,6 +193,11 @@ class Engine:
         # gaps — populated only when telemetry is enabled
         self._t_submit: dict[int, float] = {}
         self._t_last_tok: dict[int, float] = {}
+        # uids admitted-or-queued but not yet finished: duplicate-uid
+        # submissions are rejected while the first is live (they would
+        # clobber its TTFT accounting and collide its `request_key`
+        # sampling stream); reuse after finish is legal
+        self._inflight: set[int] = set()
 
     # -- placement / compilation hooks (identity on a single device) --------
 
@@ -241,6 +246,22 @@ class Engine:
             # derive the first token from (admission would crash deep
             # in the prefill cell with an opaque shape error)
             raise ValueError(f"request {req.uid}: empty prompt")
+        if req.max_new <= 0:
+            # admission derives the first token from the prefill logits
+            # unconditionally, so even max_new=0 would emit one token
+            # and violate the declared bound — reject at the boundary
+            raise ValueError(
+                f"request {req.uid}: max_new must be >= 1, "
+                f"got {req.max_new}"
+            )
+        if req.uid in self._inflight:
+            raise ValueError(
+                f"request {req.uid}: uid already in flight — a "
+                f"duplicate would clobber the live request's TTFT "
+                f"accounting and collide its sampling stream; wait for "
+                f"it to finish or submit under a fresh uid"
+            )
+        self._inflight.add(req.uid)
         tel = obs.get()
         if tel.enabled:
             self._t_submit[req.uid] = time.perf_counter()
@@ -351,6 +372,7 @@ class Engine:
                 # would leak the slot for requests finishing on the same
                 # tick they were admitted.
                 req.done = True
+                self._inflight.discard(req.uid)
                 self.active = self.active.at[slot].set(False)
                 self._t_last_tok.pop(slot, None)
                 if tel.enabled:
@@ -464,6 +486,7 @@ class Engine:
                 req.output
             ) >= req.max_new:
                 req.done = True
+                self._inflight.discard(req.uid)
                 self._slots[slot] = None
                 self.active = self.active.at[slot].set(False)
                 self._t_last_tok.pop(slot, None)

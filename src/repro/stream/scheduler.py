@@ -85,6 +85,12 @@ class MicroBatchScheduler:
         # retransmission path), so 'never drops' holds per enqueue
         self._queue: list[tuple[int, SegmentRef]] = []
         self._tie = itertools.count()
+        # cached min arrival over the queue: maintained at enqueue
+        # (min is monotone under insertion), invalidated when `_pack`
+        # removes entries, lazily recomputed on the next read. None
+        # means stale; an empty queue short-circuits before the cache
+        # is consulted.
+        self._oldest_cache: float | None = None
         # urgency bitmap: owned by the vote layer's per-patient state
         # machine (`stream.vote.update` returns it); the scheduler only
         # *consumes* it at pack time.
@@ -99,6 +105,12 @@ class MicroBatchScheduler:
     # -- admission ----------------------------------------------------------
 
     def enqueue(self, ref: SegmentRef) -> None:
+        if not self._queue:
+            self._oldest_cache = ref.arrival_s
+        elif self._oldest_cache is not None and (
+            ref.arrival_s < self._oldest_cache
+        ):
+            self._oldest_cache = ref.arrival_s
         self._queue.append((next(self._tie), ref))
         self.enqueued_total += 1
         tel = obs.get()
@@ -125,7 +137,13 @@ class MicroBatchScheduler:
         self._urgent = urgent.copy()
 
     def mark_urgent(self, patients, flag: bool = True) -> None:
-        self._urgent[np.asarray(patients)] = flag
+        # force an integer index dtype: `np.asarray([])` defaults to
+        # float64, and float-array indexing raises even for zero
+        # elements — an empty update (no patients changed state this
+        # tick) must be a no-op, not a crash
+        idx = np.asarray(patients, np.intp)
+        if idx.size:
+            self._urgent[idx] = flag
 
     def is_urgent(self, patient: int) -> bool:
         return bool(self._urgent[patient])
@@ -141,9 +159,16 @@ class MicroBatchScheduler:
         return min(r.deadline_s for _, r in self._queue)
 
     def oldest_arrival(self) -> float:
+        """Min arrival over the queue, O(1) amortized: `should_flush`
+        polls this every iteration of the virtual-time loop, and a full
+        min-scan per poll is O(n²) per drain cycle at fleet backlogs.
+        The cache is maintained incrementally at enqueue and recomputed
+        at most once per pack (the only removal point)."""
         if not self._queue:
             return float("inf")
-        return min(r.arrival_s for _, r in self._queue)
+        if self._oldest_cache is None:
+            self._oldest_cache = min(r.arrival_s for _, r in self._queue)
+        return self._oldest_cache
 
     def should_flush(self, now_s: float) -> bool:
         """Size trigger (a full largest bucket is ready) or time trigger
@@ -238,6 +263,9 @@ class MicroBatchScheduler:
             self._packed_count[p] += c
         taken = {order for order, _ in take}
         self._queue = [e for e in self._queue if e[0] not in taken]
+        # removal can only raise the min — invalidate; the next
+        # `oldest_arrival` recomputes once over the survivors
+        self._oldest_cache = None
         self.packed_total += len(take)
 
         n = len(take)

@@ -184,3 +184,40 @@ def test_va_service_end_to_end():
     assert len(out) == 4
     assert all(len(d.segment_preds) == 6 for d in out)
     assert out[0].chip_latency_us > 0
+
+
+def test_submit_guards_invalid_and_duplicate_uid():
+    """`submit` rejects max_new <= 0 and a uid already in flight with
+    actionable errors (a duplicate would clobber the live request's
+    TTFT accounting and collide its sampling stream); uid reuse AFTER
+    completion stays legal — the frontend and warmup paths rely on it."""
+    cfg = configs.reduced("qwen3_8b")
+    model = api.build_model(cfg, tp=1, max_seq=32)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = E.Engine(model, params, batch_size=2)
+
+    def req(uid, max_new=3):
+        return E.Request(
+            uid=uid,
+            prompt=jax.random.randint(
+                jax.random.PRNGKey(uid), (4,), 0, cfg.vocab
+            ),
+            max_new=max_new,
+        )
+
+    with pytest.raises(ValueError, match="max_new must be >= 1"):
+        eng.submit(req(0, max_new=0))
+    with pytest.raises(ValueError, match="max_new must be >= 1"):
+        eng.submit(req(0, max_new=-2))
+
+    r = req(1)
+    eng.submit(r)
+    with pytest.raises(ValueError, match="uid already in flight"):
+        eng.submit(req(1))
+    eng.run(max_ticks=50)
+    assert r.done and len(r.output) == 3
+
+    r2 = req(1)  # same uid, prior request finished: legal reuse
+    eng.submit(r2)
+    eng.run(max_ticks=50)
+    assert r2.done and len(r2.output) == 3

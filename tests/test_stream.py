@@ -583,3 +583,62 @@ def test_fleet_simulation_with_dropout_counts_source_gaps(program):
     # source gaps reduce the segment count; the scheduler still drops 0
     assert out["metrics"]["segments_total"] < 60
     assert out["metrics"]["dropped_total"] == 0
+
+
+def test_mark_urgent_empty_update_is_noop():
+    """Regression: `mark_urgent([])` crashed — `np.asarray([])`
+    defaults to float64, and float-array indexing raises even with
+    zero elements. An empty urgency update (e.g. a flush with no
+    newly-urgent patients) must be a no-op, for both an empty list and
+    an empty ndarray."""
+    sched = MicroBatchScheduler(
+        SchedulerConfig(buckets=(4,)), n_patients=4
+    )
+    before = sched._urgent.copy()
+    sched.mark_urgent([])                       # empty list
+    sched.mark_urgent(np.array([]))             # empty float64 ndarray
+    sched.mark_urgent(np.array([], np.int64))   # empty int ndarray
+    np.testing.assert_array_equal(sched._urgent, before)
+    sched.mark_urgent([2])
+    assert sched._urgent[2] and sched._urgent.sum() == 1
+    sched.mark_urgent(np.array([]))  # still a no-op after a real mark
+    assert sched._urgent[2] and sched._urgent.sum() == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_patients=st.integers(2, 8),
+    n_segments=st.integers(1, 50),
+    seed=st.integers(0, 10_000),
+)
+def test_oldest_arrival_cache_matches_naive_min(
+    n_patients, n_segments, seed
+):
+    """The incrementally-cached `oldest_arrival` (seeded at enqueue,
+    invalidated by `_pack`, recomputed at most once per pack) must
+    equal the naive min over the live queue across randomized
+    enqueue/pack interleavings — including repeated polls against an
+    unchanged queue, the `should_flush` hot path."""
+    sched = MicroBatchScheduler(
+        SchedulerConfig(buckets=(1, 4)), n_patients
+    )
+    rng = np.random.default_rng(seed)
+    refs = _refs(n_patients, n_segments, seed)
+
+    def naive():
+        return min(
+            (r.arrival_s for _, r in sched._queue), default=float("inf")
+        )
+
+    i = 0
+    while i < len(refs) or sched.ready():
+        take = int(rng.integers(1, 6))
+        for r in refs[i : i + take]:
+            sched.enqueue(r)
+            assert sched.oldest_arrival() == naive()
+        i = min(i + take, len(refs))
+        assert sched.oldest_arrival() == naive()  # cached re-poll
+        if sched.ready() and (rng.random() < 0.5 or i >= len(refs)):
+            sched.next_batch(now_s=float(rng.uniform(0, 20)))
+            assert sched.oldest_arrival() == naive()
+    assert sched.oldest_arrival() == float("inf")  # drained queue
