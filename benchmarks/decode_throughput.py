@@ -208,6 +208,149 @@ def measure_admission(arch: str, *, prompt_len: int) -> list:
     return cells
 
 
+def _tree_bytes(avals) -> int:
+    return sum(
+        l.size * jnp.dtype(l.dtype).itemsize for l in jax.tree.leaves(avals)
+    )
+
+
+def _drive_paged(eng, reqs, *, max_ticks: int = 600) -> tuple:
+    """Submit `reqs`, drain, and report (peak concurrent tenants,
+    peak resident cache bytes) observed across the ticks."""
+    for r in reqs:
+        eng.submit(r)
+    peak = 0
+    peak_bytes = 0
+    for _ in range(max_ticks):
+        n = eng.tick()
+        peak = max(peak, sum(s is not None for s in eng._slots))
+        peak_bytes = max(peak_bytes, eng.cache_bytes_in_use())
+        if n == 0 and not eng._queue:
+            break
+    assert all(r.done for r in reqs), "paged workload did not drain"
+    return peak, peak_bytes
+
+
+def measure_paged(arch: str) -> dict:
+    """The paged-cache tenancy cell: dense vs paged pool at (at most)
+    the same cache byte budget, mixed-length workload.
+
+    The dense pool gives every tenant a full `max_seq` cache row, so
+    its concurrency is its slot count. The paged pool spends the same
+    bytes on a shared page pool plus 4x the slots; short requests hold
+    only the pages they wrote, so the same bytes host >= 2x the
+    concurrent tenants (self-asserted). Long prompts run through
+    chunked prefill, interleaving with the shorts' decode ticks.
+
+    Two identical waves: wave 1 warms every cell (prefill widths, seat,
+    chunk, decode), wave 2 must compile nothing (`recompiles_after_
+    warmup == 0`) — and resident cache bytes must return to the initial
+    value after each drain (pages freed, not leaked)."""
+    from repro.serve.paging import PagingConfig, pages_for_position
+
+    cfg = configs.reduced(arch)
+    max_seq, page = 128, 4
+    model = api.build_model(cfg, tp=1, max_seq=max_seq)
+    params = model.init(jax.random.PRNGKey(0))
+    dense_slots, paged_slots = 4, 16
+    span = max(
+        (c // page for c in model.attn_capacities()), default=0
+    )
+    dense_total = _tree_bytes(
+        jax.eval_shape(lambda: model.init_cache(dense_slots))
+    )
+    # paged bytes are affine in n_pages: fit the byte budget exactly
+    b2 = _tree_bytes(jax.eval_shape(
+        lambda: model.init_cache_paged(paged_slots, 2, page)
+    ))
+    b3 = _tree_bytes(jax.eval_shape(
+        lambda: model.init_cache_paged(paged_slots, 3, page)
+    ))
+    slope = b3 - b2
+    n_pages = int((dense_total - (b2 - 2 * slope)) // slope)
+    paged_total = b2 + (n_pages - 2) * slope
+    assert paged_total <= dense_total, (paged_total, dense_total)
+
+    short_len, long_len, max_new = 4, 40, 8
+    def mkreqs(uid0):
+        reqs = []
+        for i in range(paged_slots - 2):
+            reqs.append(E.Request(
+                uid=uid0 + i,
+                prompt=jax.random.randint(
+                    jax.random.PRNGKey(uid0 + i), (short_len,), 0,
+                    cfg.vocab,
+                ),
+                max_new=max_new,
+            ))
+        for i in range(2):
+            reqs.append(E.Request(
+                uid=uid0 + 100 + i,
+                prompt=jax.random.randint(
+                    jax.random.PRNGKey(uid0 + 100 + i), (long_len,), 0,
+                    cfg.vocab,
+                ),
+                max_new=max_new,
+            ))
+        return reqs
+
+    # the workload's worst-case page demand must fit, or admission
+    # deferral would cap the concurrency this cell is measuring
+    worst = (paged_slots - 2) * pages_for_position(
+        short_len + max_new - 2, page, span
+    ) + 2 * pages_for_position(long_len + max_new - 2, page, span)
+    assert worst <= n_pages - 1, (worst, n_pages)
+
+    dense = E.Engine(model, params, batch_size=dense_slots)
+    paged = E.Engine(
+        model, params, batch_size=paged_slots,
+        paging=PagingConfig(page_size=page, n_pages=n_pages),
+        chunk_tokens=2 * page,
+    )
+    initial_bytes = paged.cache_bytes_in_use()
+
+    probe = obs.get().probe
+    dense_peak, _ = _drive_paged(dense, mkreqs(0))
+    paged_peak, peak_bytes = _drive_paged(paged, mkreqs(200))
+    drain1_bytes = paged.cache_bytes_in_use()
+    snap = probe.snapshot()
+    dense_peak2, _ = _drive_paged(dense, mkreqs(400))
+    paged_peak2, peak_bytes2 = _drive_paged(paged, mkreqs(600))
+    misses = probe.new_misses(snap)
+    paged._pg.check_invariants()
+
+    return {
+        "arch": cfg.name,
+        "page_size": page,
+        "n_pages": n_pages,
+        "span": span,
+        "max_seq": max_seq,
+        "chunk_tokens": 2 * page,
+        "dense_pool_slots": dense_slots,
+        "paged_pool_slots": paged_slots,
+        "dense_cache_bytes_total": dense_total,
+        "paged_cache_bytes_total": paged_total,
+        "dense_peak_concurrent": max(dense_peak, dense_peak2),
+        "paged_peak_concurrent": max(paged_peak, paged_peak2),
+        "concurrency_gain": max(paged_peak, paged_peak2)
+        / max(dense_peak, dense_peak2),
+        "bytes_in_use": {
+            "initial": initial_bytes,
+            "peak": max(peak_bytes, peak_bytes2),
+            "post_drain": drain1_bytes,
+            "post_drain_final": paged.cache_bytes_in_use(),
+        },
+        "recompiles_after_warmup": sum(misses.values()),
+        "recompiles_after_warmup_by_cell": misses,
+        # so main() can reconcile the registry's global admission
+        # counters, which these two engines also feed
+        "admission_rowsteps": dense.admission_rowsteps
+        + paged.admission_rowsteps,
+        "admission_prefills": dense.admission_prefills
+        + paged.admission_prefills,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -281,15 +424,18 @@ def main() -> None:
         })
 
     admission = measure_admission(ARCHS[0], prompt_len=args.prompt_len)
+    paged = measure_paged(ARCHS[0])
 
     telemetry = obs.telemetry_section()
     rec = {
+        "benchmark": "decode_throughput",
         "n_host_devices": jax.device_count(),
         "hbm_bw_bytes_per_s": HBM_BW_BYTES_PER_S,
         "reduced_configs": True,
         "cells": cells,
         "scaling": scaling,
         "admission": admission,
+        "paged": paged,
         "telemetry": telemetry,
     }
     with open(args.out, "w") as f:
@@ -339,6 +485,32 @@ def main() -> None:
             big["admission_rowsteps"]
             < big["replay_rowsteps_counterfactual"]
         ), big
+    # paged tenancy gates: >= 2x concurrent tenants at a cache byte
+    # budget no larger than the dense pool's, resident bytes fully
+    # reclaimed after every drain, and nothing recompiled after the
+    # warmup wave
+    p = paged
+    print(
+        f"[decode_throughput] paged {p['arch']}: "
+        f"{p['paged_peak_concurrent']} vs {p['dense_peak_concurrent']} "
+        f"concurrent ({p['concurrency_gain']:.1f}x) at "
+        f"{p['paged_cache_bytes_total']} <= "
+        f"{p['dense_cache_bytes_total']} cache bytes; bytes in use "
+        f"{p['bytes_in_use']['initial']} -> peak "
+        f"{p['bytes_in_use']['peak']} -> drained "
+        f"{p['bytes_in_use']['post_drain_final']}; "
+        f"{p['recompiles_after_warmup']} recompiles after warmup"
+    )
+    assert p["concurrency_gain"] >= 2.0, p
+    assert p["paged_cache_bytes_total"] <= p["dense_cache_bytes_total"], p
+    assert p["bytes_in_use"]["post_drain"] == p["bytes_in_use"]["initial"], p
+    assert (
+        p["bytes_in_use"]["post_drain_final"]
+        == p["bytes_in_use"]["initial"]
+    ), p
+    assert p["bytes_in_use"]["peak"] > p["bytes_in_use"]["initial"], p
+    assert p["recompiles_after_warmup"] == 0, p
+
     # telemetry gates: the registry's admission counters mirror the
     # engines' own accounting exactly (summed over every admission
     # cell in this process), the per-request latency histograms are
@@ -348,10 +520,10 @@ def main() -> None:
     assert t["schema_version"] == obs.SCHEMA_VERSION and t["enabled"]
     assert t["counters"]["serve.admission_rowsteps"] == sum(
         c["admission_rowsteps"] for c in admission
-    ), t["counters"]
+    ) + paged["admission_rowsteps"], t["counters"]
     assert t["counters"]["serve.admission_prefills"] == sum(
         c["admission_prefills"] for c in admission
-    ), t["counters"]
+    ) + paged["admission_prefills"], t["counters"]
     for name in ("serve.ttft_s", "serve.inter_token_s"):
         h = t["histograms"][name]
         assert h["count"] > 0 and None not in (

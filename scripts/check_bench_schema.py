@@ -22,6 +22,12 @@ Per-benchmark sections (keyed on the record's "benchmark" name):
     rate, a non-empty points list, the overload verdict block, and the
     socket-vs-inproc transport_overhead pairing — the loopback-socket
     sweep silently falling out of the bench fails here.
+  * decode_throughput must carry the paged-cache tenancy cell: a
+    "paged" dict with the pool geometry, a concurrency_gain >= 2 at
+    paged bytes <= dense bytes, the bytes_in_use residency trace
+    returning to its initial value after drain, and zero recompiles
+    after warmup — the paged section falling out of the bench (or the
+    tenancy win regressing) fails here.
 """
 
 from __future__ import annotations
@@ -65,6 +71,71 @@ def _check_frontend(path: str, rec: dict) -> list[str]:
     return errors
 
 
+# required (key, type) pairs of the decode_throughput record's paged
+# (tenancy) section — `decode_throughput.measure_paged` output
+PAGED_KEYS = (
+    ("page_size", int),
+    ("n_pages", int),
+    ("span", int),
+    ("dense_pool_slots", int),
+    ("paged_pool_slots", int),
+    ("dense_cache_bytes_total", int),
+    ("paged_cache_bytes_total", int),
+    ("dense_peak_concurrent", int),
+    ("paged_peak_concurrent", int),
+    ("concurrency_gain", (int, float)),
+    ("bytes_in_use", dict),
+    ("recompiles_after_warmup", int),
+)
+
+
+def _check_paged(path: str, rec: dict) -> list[str]:
+    pg = rec.get("paged")
+    if not isinstance(pg, dict):
+        return [f"{path}: decode_throughput record has no 'paged' "
+                f"(paged-cache tenancy) section"]
+    errors = []
+    for k, typ in PAGED_KEYS:
+        if not isinstance(pg.get(k), typ):
+            errors.append(f"{path}: paged section missing {k!r}")
+    gain = pg.get("concurrency_gain")
+    if isinstance(gain, (int, float)) and gain < 2.0:
+        errors.append(
+            f"{path}: paged concurrency_gain {gain} < 2.0 (the "
+            f"committed record must show the tenancy win)"
+        )
+    if (isinstance(pg.get("paged_cache_bytes_total"), int)
+            and isinstance(pg.get("dense_cache_bytes_total"), int)
+            and pg["paged_cache_bytes_total"]
+            > pg["dense_cache_bytes_total"]):
+        errors.append(
+            f"{path}: paged pool spends more cache bytes than dense "
+            f"({pg['paged_cache_bytes_total']} > "
+            f"{pg['dense_cache_bytes_total']}) — the gain must come at "
+            f"a fixed byte budget"
+        )
+    biu = pg.get("bytes_in_use")
+    if isinstance(biu, dict):
+        for k in ("initial", "peak", "post_drain", "post_drain_final"):
+            if not isinstance(biu.get(k), int):
+                errors.append(f"{path}: paged bytes_in_use missing {k!r}")
+        if (isinstance(biu.get("post_drain_final"), int)
+                and isinstance(biu.get("initial"), int)
+                and biu["post_drain_final"] != biu["initial"]):
+            errors.append(
+                f"{path}: paged pool did not drain to its initial "
+                f"residency ({biu['post_drain_final']} != "
+                f"{biu['initial']}) — leaked pages"
+            )
+    if pg.get("recompiles_after_warmup") != 0:
+        errors.append(
+            f"{path}: paged cells recompiled after warmup "
+            f"({pg.get('recompiles_after_warmup')!r}) — paging broke "
+            f"the per-width compiled-cell discipline"
+        )
+    return errors
+
+
 def check_file(path: str, schema_version: int) -> list[str]:
     errors = []
     try:
@@ -88,6 +159,8 @@ def check_file(path: str, schema_version: int) -> list[str]:
             errors.append(f"{path}: telemetry missing {k!r}")
     if rec.get("benchmark") == "load_sweep":
         errors.extend(_check_frontend(path, rec))
+    if rec.get("benchmark") == "decode_throughput":
+        errors.extend(_check_paged(path, rec))
     return errors
 
 

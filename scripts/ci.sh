@@ -88,6 +88,59 @@ python -m repro.launch.serve --arch qwen3-8b --reduced --batch 4 \
   --load-fractions 0.25,3.0 --load-requests 16 \
   --trace-out /tmp/ci_trace_frontend
 
+# Paged-cache rejection smoke: a paged engine behind the frontend over
+# a real loopback socket, with a page pool deliberately too small for
+# one of the two requests. The satisfiable request must complete and
+# the never-satisfiable one must come back as a typed
+# rejected/pages_exhausted lm_result — the wire contract clients size
+# down from (tests/test_frontend.py covers the in-proc path; this
+# prices the socket).
+python - <<'EOF'
+import asyncio
+import jax
+
+from repro import configs
+from repro.models import api
+from repro.serve import engine as E
+from repro.serve.frontend import (
+    Frontend, FrontendConfig, SocketClient,
+    REASON_PAGES, STATUS_COMPLETED, STATUS_REJECTED,
+)
+from repro.serve.paging import PagingConfig
+
+cfg = configs.reduced("qwen3_8b")
+model = api.build_model(cfg, tp=1, max_seq=24)
+params = model.init(jax.random.PRNGKey(0))
+# 3 pages of 4 positions: 2 usable + scratch -> worst case of
+# prompt 9 + max_new 8 (4 pages) can never seat
+eng = E.Engine(
+    model, params, batch_size=2,
+    paging=PagingConfig(page_size=4, n_pages=3),
+)
+
+async def main():
+    fe = Frontend(engine=eng, cfg=FrontendConfig())
+    host, port = await fe.start()
+    cli = await SocketClient.connect(host, port)
+    ok = await cli.send_lm(0, [3, 1, 4], max_new=3)
+    bad = await cli.send_lm(1, list(range(2, 11)), max_new=8)
+    ok, bad = await asyncio.gather(
+        asyncio.wait_for(ok, 120), asyncio.wait_for(bad, 120)
+    )
+    assert ok["status"] == STATUS_COMPLETED and ok["tokens"], ok
+    assert bad["status"] == STATUS_REJECTED, bad
+    assert bad["reason"] == REASON_PAGES, bad
+    await cli.close()
+    await fe.stop()
+    print(
+        f"[ci] pages_exhausted smoke: uid 0 completed "
+        f"({len(ok['tokens'])} tokens), uid 1 rejected "
+        f"({bad['reason']})"
+    )
+
+asyncio.run(main())
+EOF
+
 # Every emitted trace is validated line-by-line against the
 # repro.obs.trace event schema and its Chrome/Perfetto export checked
 # well-formed (exits nonzero on empty/malformed) — not just the

@@ -170,17 +170,44 @@ def _build_lm_engine(args):
         args.arch
     )
     max_seq = args.prompt_len + args.max_new + 2
+    page = getattr(args, "page_size", None)
+    if page:
+        # paged pools need page_size | every attention capacity; round
+        # the derived max_seq up instead of bouncing the run
+        max_seq += (-max_seq) % page
     model = api.build_model(cfg, tp=1, max_seq=max_seq)
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
     mesh = make_serving_mesh(args.mesh) if args.mesh else None
 
+    paging = None
+    chunk_tokens = getattr(args, "chunk_tokens", None)
+    if page:
+        from repro.dist import sharding as shd
+        from repro.serve.paging import PagingConfig, validate_page_size
+
+        n_data = (
+            shd._axis_size(shd.data_axes(cfg, mesh), mesh)
+            if mesh is not None else 1
+        )
+        per_dev = getattr(args, "pages_per_device", None)
+        if per_dev is None:
+            # default: the dense pool's worth of pages (+1 scratch) —
+            # paged then never rejects what dense would have seated
+            span = validate_page_size(page, model.attn_capacities())
+            per_dev = (args.batch // max(n_data, 1)) * span + 1
+        paging = PagingConfig(page, per_dev * max(n_data, 1))
+
     def make_engine():
         if mesh is not None:
             return SH.ShardedEngine(
-                model, params, batch_size=args.batch, mesh=mesh
+                model, params, batch_size=args.batch, mesh=mesh,
+                paging=paging, chunk_tokens=chunk_tokens,
             )
-        return E.Engine(model, params, batch_size=args.batch)
+        return E.Engine(
+            model, params, batch_size=args.batch,
+            paging=paging, chunk_tokens=chunk_tokens,
+        )
 
     def make_prompts(n):
         toks = jax.random.randint(
@@ -422,7 +449,21 @@ def main() -> None:
                     help="enable telemetry; on exit write PREFIX.jsonl "
                          "(event log) and PREFIX.json (Chrome/Perfetto "
                          "trace)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="paged KV cache: positions per page (must "
+                         "divide every attention window; max_seq is "
+                         "rounded up to a multiple)")
+    ap.add_argument("--pages-per-device", type=int, default=None,
+                    help="with --page-size: physical pages per data "
+                         "shard incl. 1 scratch (default: the dense "
+                         "pool equivalent, batch/shard x span + 1)")
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="chunked prefill: split prompts longer than "
+                         "this into page-sized chunks interleaved "
+                         "with decode ticks")
     args = ap.parse_args()
+    if args.pages_per_device and not args.page_size:
+        ap.error("--pages-per-device requires --page-size")
     if args.top_k and args.temperature is None:
         ap.error("--top-k only applies when sampling; pass "
                  "--temperature too (e.g. --temperature 1.0)")

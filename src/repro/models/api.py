@@ -57,6 +57,15 @@ class Model:
     prefill: Callable[..., tuple[jax.Array, Any]]
     decode_step: Callable[..., tuple[jax.Array, Any]]
     init_cache: Callable[[int], Any]
+    # Paged serving cache (None where unsupported, e.g. enc-dec):
+    #   init_cache_paged(batch, n_pages, page) -> cache with K/V page pools
+    #   decode_step_paged(p, cache, token, pos, page_tbl, page) -> (logits, cache)
+    #   page_layouts(page) -> {attn cache path prefix: (pages_per_slot, page)}
+    #   attn_capacities() -> per-attention-block cache capacities
+    init_cache_paged: Optional[Callable[[int, int, int], Any]] = None
+    decode_step_paged: Optional[Callable[..., tuple[jax.Array, Any]]] = None
+    page_layouts: Optional[Callable[[int], dict]] = None
+    attn_capacities: Optional[Callable[[], tuple[int, ...]]] = None
 
 
 def build_model(cfg: ArchConfig, *, tp: int = 1, max_seq: int = 4096) -> Model:
@@ -92,6 +101,15 @@ def build_model(cfg: ArchConfig, *, tp: int = 1, max_seq: int = 4096) -> Model:
             p, cache, token, pos, cfg, dims
         ),
         init_cache=lambda batch: T.init_cache(cfg, dims, batch, max_seq),
+        init_cache_paged=lambda batch, n_pages, page: T.init_cache_paged(
+            cfg, dims, batch, n_pages, page, max_seq
+        ),
+        decode_step_paged=lambda p, cache, token, pos, tbl, page: (
+            T.decode_step(p, cache, token, pos, cfg, dims,
+                          page_tbl=tbl, page=page)
+        ),
+        page_layouts=lambda page: T.paged_layouts(cfg, page, max_seq),
+        attn_capacities=lambda: T.attn_capacities(cfg, max_seq),
     )
 
 

@@ -190,6 +190,81 @@ def attn_cache_init(
     }
 
 
+def attn_cache_init_paged(
+    cfg: ArchConfig, dims: Dims, kind: str, batch: int, n_pages: int,
+    page: int, max_seq: int, dtype,
+) -> dict:
+    """Paged twin of `attn_cache_init`: K/V live in a shared page pool.
+
+    K/V (and int8 scales) become `(n_pages, page, ...)` physical pages;
+    which pages belong to which slot is the engine-owned indirection
+    table, passed into `decode_step` per tick (never stored in the
+    cache pytree). `slot_pos` stays a dense per-slot `(batch, cap)` —
+    it is the validity mask that makes garbage in unmapped/scratch
+    pages unreadable, so it must always be slot-addressed.
+    """
+    cap = cache_capacity(cfg, kind, max_seq)
+    if cap % page != 0:
+        raise ValueError(
+            f"page={page} does not divide {kind} cache capacity {cap}"
+        )
+    if cfg.kv_quant_bits == 8:
+        return {
+            "k": jnp.zeros((n_pages, page, dims.n_kv, cfg.hd), jnp.int8),
+            "v": jnp.zeros((n_pages, page, dims.n_kv, cfg.hd), jnp.int8),
+            "k_scale": jnp.zeros((n_pages, page, dims.n_kv), jnp.float32),
+            "v_scale": jnp.zeros((n_pages, page, dims.n_kv), jnp.float32),
+            "slot_pos": jnp.full((batch, cap), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((n_pages, page, dims.n_kv, cfg.hd), dtype),
+        "v": jnp.zeros((n_pages, page, dims.n_kv, cfg.hd), dtype),
+        "slot_pos": jnp.full((batch, cap), -1, jnp.int32),
+    }
+
+
+def attn_capacities(cfg: ArchConfig, max_seq: int) -> tuple[int, ...]:
+    """Cache capacities of every attention block position (pattern+tail)."""
+    kinds = tuple(cfg.pattern) + tuple(cfg.tail or ())
+    return tuple(
+        cache_capacity(cfg, k, max_seq)
+        for k in kinds
+        if k not in ("rglru", "rwkv")
+    )
+
+
+def paged_layouts(
+    cfg: ArchConfig, page: int, max_seq: int
+) -> dict[str, tuple[int, int]]:
+    """attn-dict cache path prefix -> (logical pages per slot, page size).
+
+    Keys match `dist.sharding._path_str` parent prefixes of the paged
+    K/V leaves (e.g. "blocks/pos0/attn"); `serve.seating` uses this to
+    tell page-pool leaves from dense per-slot leaves, and the engines
+    to size the per-block table view.
+    """
+    out: dict[str, tuple[int, int]] = {}
+    for p_idx, kind in enumerate(cfg.pattern):
+        if kind in ("rglru", "rwkv"):
+            continue
+        cap = cache_capacity(cfg, kind, max_seq)
+        if cap % page != 0:
+            raise ValueError(
+                f"page={page} does not divide {kind} cache capacity {cap}"
+            )
+        out[f"blocks/pos{p_idx}/attn"] = (cap // page, page)
+    for i, kind in enumerate(cfg.tail or ()):
+        if kind in ("rglru", "rwkv"):
+            continue
+        cap = cache_capacity(cfg, kind, max_seq)
+        if cap % page != 0:
+            raise ValueError(
+                f"page={page} does not divide {kind} cache capacity {cap}"
+            )
+        out[f"tail/pos{i}/attn"] = (cap // page, page)
+    return out
+
+
 def _kv_quant(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """(B, S, Kv, hd) -> (int8 values, (B, S, Kv) f32 scales)."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
@@ -202,9 +277,18 @@ def _kv_quant(x: jax.Array) -> tuple[jax.Array, jax.Array]:
 
 def attn_apply_decode(
     p: dict, x: jax.Array, pos: jax.Array, cache: dict, cfg: ArchConfig,
-    dims: Dims, kind: str, *, spe, dtype,
+    dims: Dims, kind: str, *, spe, dtype, page_tbl=None, page=0,
 ) -> tuple[jax.Array, dict]:
-    """x (B,1,D); pos (B,) absolute positions. Ring-buffer cache update."""
+    """x (B,1,D); pos (B,) absolute positions. Ring-buffer cache update.
+
+    With `page_tbl` (B, span) set, K/V live in a `(n_pages, page, ...)`
+    pool: the slot's mapped pages are gathered back into the dense
+    (B, cap) ring view, attention runs unchanged on that view, and the
+    new token is scattered into its physical page. Unmapped logical
+    pages point at the scratch page whose garbage never survives the
+    `slot_pos` validity mask (masked scores hit exp(-1e30-...) == 0.0
+    exactly), so paged and dense decode are bitwise identical.
+    """
     b = x.shape[0]
     rope_pos = pos[:, None]  # (B,1)
     if cfg.mrope_sections:
@@ -212,32 +296,67 @@ def attn_apply_decode(
             pos[:, None, None], (b, len(cfg.mrope_sections), 1)
         )
     q, k, v = _qkv(p, x, rope_pos, cfg, dims, spe, dtype)
-    cap = cache["k"].shape[1]
+    cap = cache["slot_pos"].shape[1]
     slot = (pos % cap).astype(jnp.int32)  # (B,)
     bidx = jnp.arange(b)
     slot_pos = cache["slot_pos"].at[bidx, slot].set(pos.astype(jnp.int32))
+    paged = page_tbl is not None
+    if paged:
+        tblb = page_tbl[:, : cap // page]  # (B, maxp) this block's view
+
+        def expand(pool):  # (nP, page, ...) -> dense ring view (B, cap, ...)
+            return pool[tblb].reshape(b, cap, *pool.shape[2:])
+
+        phys = jnp.take_along_axis(
+            tblb, (slot // page)[:, None].astype(tblb.dtype), axis=1
+        )[:, 0]
+        off = slot % page
     if cfg.kv_quant_bits == 8:
         kq, ks = _kv_quant(k)
         vq, vs = _kv_quant(v)
-        k_cache = cache["k"].at[bidx, slot].set(kq[:, 0])
-        v_cache = cache["v"].at[bidx, slot].set(vq[:, 0])
-        k_scale = cache["k_scale"].at[bidx, slot].set(ks[:, 0])
-        v_scale = cache["v_scale"].at[bidx, slot].set(vs[:, 0])
+        if paged:
+            k_cache = expand(cache["k"]).at[bidx, slot].set(kq[:, 0])
+            v_cache = expand(cache["v"]).at[bidx, slot].set(vq[:, 0])
+            k_scale = expand(cache["k_scale"]).at[bidx, slot].set(ks[:, 0])
+            v_scale = expand(cache["v_scale"]).at[bidx, slot].set(vs[:, 0])
+            new_cache = {
+                "k": cache["k"].at[phys, off].set(kq[:, 0]),
+                "v": cache["v"].at[phys, off].set(vq[:, 0]),
+                "k_scale": cache["k_scale"].at[phys, off].set(ks[:, 0]),
+                "v_scale": cache["v_scale"].at[phys, off].set(vs[:, 0]),
+                "slot_pos": slot_pos,
+            }
+        else:
+            k_cache = cache["k"].at[bidx, slot].set(kq[:, 0])
+            v_cache = cache["v"].at[bidx, slot].set(vq[:, 0])
+            k_scale = cache["k_scale"].at[bidx, slot].set(ks[:, 0])
+            v_scale = cache["v_scale"].at[bidx, slot].set(vs[:, 0])
+            new_cache = {"k": k_cache, "v": v_cache, "k_scale": k_scale,
+                         "v_scale": v_scale, "slot_pos": slot_pos}
         out = A.attention_decode(
             q[:, 0], k_cache, v_cache, slot_pos, pos, kind=kind,
             window=cfg.window, cap=cfg.attn_softcap,
             k_scale=k_scale, v_scale=v_scale,
         )
-        new_cache = {"k": k_cache, "v": v_cache, "k_scale": k_scale,
-                     "v_scale": v_scale, "slot_pos": slot_pos}
     else:
-        k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
-        v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
+        if paged:
+            k_cache = expand(cache["k"]).at[bidx, slot].set(k[:, 0])
+            v_cache = expand(cache["v"]).at[bidx, slot].set(v[:, 0])
+            new_cache = {
+                "k": cache["k"].at[phys, off].set(k[:, 0].astype(
+                    cache["k"].dtype)),
+                "v": cache["v"].at[phys, off].set(v[:, 0].astype(
+                    cache["v"].dtype)),
+                "slot_pos": slot_pos,
+            }
+        else:
+            k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
+            v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
+            new_cache = {"k": k_cache, "v": v_cache, "slot_pos": slot_pos}
         out = A.attention_decode(
             q[:, 0], k_cache, v_cache, slot_pos, pos, kind=kind,
             window=cfg.window, cap=cfg.attn_softcap,
         )
-        new_cache = {"k": k_cache, "v": v_cache, "slot_pos": slot_pos}
     y = linear_apply(
         p["wo"], out.reshape(b, 1, dims.n_heads * cfg.hd), spe=spe,
         dtype=dtype,
@@ -315,6 +434,8 @@ def block_apply(
     cache: Optional[dict] = None,
     spe=None,
     dtype=jnp.bfloat16,
+    page_tbl=None,
+    page=0,
 ) -> tuple[jax.Array, jax.Array, Optional[dict]]:
     """Returns (h, moe_aux, new_cache)."""
     if kind == "rwkv":
@@ -335,7 +456,7 @@ def block_apply(
     elif cache is not None:
         mixed, nc = attn_apply_decode(
             p["mix"], a_in, pos, cache["attn"], cfg, dims, kind,
-            spe=spe, dtype=dtype,
+            spe=spe, dtype=dtype, page_tbl=page_tbl, page=page,
         )
         new_cache["attn"] = nc
     else:
@@ -565,6 +686,50 @@ def init_cache(
     return cache
 
 
+def block_cache_init_paged(
+    cfg: ArchConfig, dims: Dims, kind: str, batch: int, n_pages: int,
+    page: int, max_seq: int, dtype,
+) -> dict:
+    if kind in ("rwkv", "rglru"):
+        # Recurrent state is O(1) per slot — nothing to page.
+        return block_cache_init(cfg, dims, kind, batch, max_seq, dtype)
+    return {
+        "attn": attn_cache_init_paged(
+            cfg, dims, kind, batch, n_pages, page, max_seq, dtype
+        )
+    }
+
+
+def init_cache_paged(
+    cfg: ArchConfig, dims: Dims, batch: int, n_pages: int, page: int,
+    max_seq: int,
+) -> dict:
+    """Paged twin of `init_cache`: every attention block position gets
+    its own `(n_pages, page, ...)` K/V pool; recurrent and `slot_pos`
+    state stays dense per-slot. With no attention blocks this is
+    exactly `init_cache` (paging degenerates to the dense pool)."""
+    dtype = compute_dtype(cfg)
+    cache: dict[str, Any] = {"blocks": {}}
+    for p_idx, kind in enumerate(cfg.pattern):
+        one = block_cache_init_paged(
+            cfg, dims, kind, batch, n_pages, page, max_seq, dtype
+        )
+        cache["blocks"][f"pos{p_idx}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x[None], (cfg.n_groups, *x.shape)
+            ).copy(),
+            one,
+        )
+    if cfg.tail:
+        cache["tail"] = {
+            f"pos{i}": block_cache_init_paged(
+                cfg, dims, kind, batch, n_pages, page, max_seq, dtype
+            )
+            for i, kind in enumerate(cfg.tail)
+        }
+    return cache
+
+
 def decode_step(
     params: dict,
     cache: dict,
@@ -572,6 +737,8 @@ def decode_step(
     pos: jax.Array,  # (B,) int32 absolute position of `token`
     cfg: ArchConfig,
     dims: Dims,
+    page_tbl=None,  # (B, span) int32 slot->page table; None = dense pool
+    page: int = 0,
 ) -> tuple[jax.Array, dict]:
     """One-token step: returns (logits (B, V_padded) f32, new cache)."""
     dtype = compute_dtype(cfg)
@@ -586,6 +753,7 @@ def decode_step(
             h, _, nc = block_apply(
                 gp[f"pos{p_idx}"], h, pos, cfg, dims, kind,
                 cache=gc[f"pos{p_idx}"], spe=None, dtype=dtype,
+                page_tbl=page_tbl, page=page,
             )
             new_gc[f"pos{p_idx}"] = nc
         return h, new_gc
@@ -600,6 +768,7 @@ def decode_step(
             h, _, nc = block_apply(
                 params["tail"][f"pos{i}"], h, pos, cfg, dims, kind,
                 cache=cache["tail"][f"pos{i}"], spe=None, dtype=dtype,
+                page_tbl=page_tbl, page=page,
             )
             new_cache["tail"][f"pos{i}"] = nc
     h = norm_apply(cfg.norm, params["final_norm"], h)

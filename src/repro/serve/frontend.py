@@ -27,7 +27,8 @@ UTF-8 JSON object:
     {"type": "lm_result", "uid": int, "status": "completed",
      "tokens": [int...]}
     {"type": "lm_result", "uid": int, "status": "rejected",
-     "reason": "admission_rate"|"queue_full"|"invalid",
+     "reason": "admission_rate"|"queue_full"|"invalid"
+               |"pages_exhausted",
      "detail": str}
     {"type": "segment_ack", "patient": int, "seq": int,
      "status": "enqueued"|"deferred", "urgent": bool}
@@ -94,6 +95,7 @@ STATUS_REJECTED = "rejected"
 REASON_ADMISSION = "admission_rate"
 REASON_QUEUE_FULL = "queue_full"
 REASON_INVALID = "invalid"
+REASON_PAGES = "pages_exhausted"
 
 
 def encode_frame(msg: dict, *, max_frame_bytes: int = 1 << 20) -> bytes:
@@ -600,6 +602,7 @@ class Frontend:
         import jax.numpy as jnp
 
         from repro.serve.engine import Request
+        from repro.serve.paging import PagesExhaustedError
 
         inflight: dict[int, Any] = {}
         drains: list[Callable] = []
@@ -624,6 +627,16 @@ class Frontend:
                             max_new=max_new, eos=eos,
                         )
                         self.engine.submit(req)
+                    except PagesExhaustedError as e:
+                        # never satisfiable on this page pool: the
+                        # worst-case page need exceeds a whole shard's
+                        # usable pages, so queueing could only stall —
+                        # typed rejection clients can size down from
+                        self._post(self._resolve_lm, uid, {
+                            "status": STATUS_REJECTED,
+                            "reason": REASON_PAGES,
+                            "detail": str(e),
+                        })
                     except Exception as e:
                         # engine-boundary validation (empty prompt,
                         # max_new <= 0, duplicate in-flight uid) comes
@@ -870,6 +883,7 @@ __all__ = [
     "read_frame",
     "REASON_ADMISSION",
     "REASON_INVALID",
+    "REASON_PAGES",
     "REASON_QUEUE_FULL",
     "STATUS_COMPLETED",
     "STATUS_REJECTED",

@@ -77,6 +77,110 @@ def scatter_slots(
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+# Leaf names that become (n_pages, page, ...) pools under paged layouts
+# (subset of dist.sharding._KV_LEAVES; slot_pos stays per-slot dense).
+PAGED_LEAVES = ("k", "v", "k_scale", "v_scale")
+
+
+def _leaf_layout(parts: list[str], layouts: dict) -> Any:
+    """(pages_per_slot, page) for paged pool leaves, else None."""
+    if parts[-1] not in PAGED_LEAVES:
+        return None
+    return layouts.get("/".join(parts[:-1]))
+
+
+def scatter_pages(
+    pool: Any, rows: Any, src: jax.Array, dst: jax.Array,
+    phys: jax.Array, *, layouts: dict,
+) -> Any:
+    """Page-granular seating: the paged twin of `scatter_slots`.
+
+    `rows` is a *dense* admission cache (what batched prefill or the
+    chunked-prefill cell produces: slot-axis leaves of capacity `cap`);
+    `pool` is the engine's paged pool. Dense leaves (slot_pos, recurrent
+    state) seat exactly as `scatter_slots`. Paged K/V leaves are split
+    along the capacity axis into `pages_per_slot` logical pages and each
+    page is written to its physical page `phys[j, lp]` in the pool
+    (`phys` is the (K, span) slot->page indirection rows of the seated
+    slots; entries beyond a request's allocated pages point at the
+    shard's scratch page, so over-writing them is harmless by
+    construction — scratch is never read unmasked).
+
+    `layouts` comes from `model.page_layouts(page)`: attn cache path
+    prefix -> (pages_per_slot, page). One compiled cell per admitted
+    width, same as dense seating; engines jit with donate_argnums=0.
+
+    Paged leaves move as ONE gather + ONE scatter per leaf (all K*span
+    pages at once), not a page-at-a-time update loop: under explicit
+    mesh shardings the SPMD partitioner handles a single batched
+    scatter well, while O(K*span) chained dynamic updates make compile
+    time explode. Entries of `phys` that alias (several slots' unmapped
+    tails all point at scratch) scatter in unspecified order — harmless
+    by the scratch contract above.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(pool)
+    row_leaves = jax.tree.leaves(rows)
+    if len(flat) != len(row_leaves):
+        raise ValueError(
+            f"pool has {len(flat)} leaves but rows {len(row_leaves)} — "
+            f"seating needs structurally matching cache pytrees"
+        )
+    out = []
+    for (kp, pl), rl in zip(flat, row_leaves):
+        parts = shd._path_str(kp).split("/")
+        lay = _leaf_layout(parts, layouts)
+        ax = shd.cache_batch_axis(parts)
+        if lay is None:
+            for j in range(src.shape[0]):
+                sl = jax.lax.dynamic_slice_in_dim(rl, src[j], 1, axis=ax)
+                start = [0] * pl.ndim
+                start[ax] = dst[j]
+                pl = jax.lax.dynamic_update_slice(
+                    pl, sl.astype(pl.dtype), tuple(start)
+                )
+        else:
+            maxp, page = lay
+            # pool leaf: physical-page axis at `ax` (nP); rows leaf:
+            # slot axis at `ax`, capacity axis right after it.
+            rm = jnp.moveaxis(rl, (ax, ax + 1), (0, 1))  # (slots, cap, ..)
+            sel = jnp.take(rm, src, axis=0)  # (K, cap, ..)
+            sel = sel.reshape((src.shape[0] * maxp, page) + sel.shape[2:])
+            pm = jnp.moveaxis(pl, (ax, ax + 1), (0, 1))  # (nP, page, ..)
+            pm = pm.at[phys.reshape(-1)].set(sel.astype(pl.dtype))
+            pl = jnp.moveaxis(pm, (0, 1), (ax, ax + 1))
+        out.append(pl)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def gather_pages(
+    pool: Any, slots: jax.Array, phys: jax.Array, *, layouts: dict
+) -> Any:
+    """Inverse of `scatter_pages`: materialize dense cache rows for
+    `slots[0..K-1]` from the paged pool — paged K/V leaves gather their
+    mapped physical pages back into capacity order, dense leaves gather
+    slot rows (exactly `gather_slots`). Used by migration/tests to
+    compare a paged slot against its dense twin."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(pool)
+    out = []
+    for kp, pl in flat:
+        parts = shd._path_str(kp).split("/")
+        lay = _leaf_layout(parts, layouts)
+        ax = shd.cache_batch_axis(parts)
+        if lay is None:
+            picks = [
+                jax.lax.dynamic_slice_in_dim(pl, slots[j], 1, axis=ax)
+                for j in range(slots.shape[0])
+            ]
+            out.append(jnp.concatenate(picks, axis=ax))
+        else:
+            maxp, page = lay
+            pm = jnp.moveaxis(pl, (ax, ax + 1), (0, 1))  # (nP, page, ..)
+            sel = jnp.take(pm, phys.reshape(-1), axis=0)  # (K*maxp, page, ..)
+            sel = sel.reshape((slots.shape[0], maxp * page) + sel.shape[2:])
+            out.append(jnp.moveaxis(sel, (0, 1), (ax, ax + 1)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def gather_slots(pool: Any, slots: jax.Array) -> Any:
     """Read slot rows back out: returns a pytree mirroring `pool` whose
     slot axis holds `pool`'s rows `slots[0..K-1]`, in order — the exact

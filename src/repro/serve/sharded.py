@@ -45,6 +45,7 @@ flip on near-uniform (e.g. random-init) logits —
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any, Callable, Optional, Tuple
 
@@ -58,10 +59,12 @@ from repro.models.api import Model
 from repro.serve import seating
 from repro.serve.engine import (
     Engine,
+    _chunk_prefill_fn,
     _reject_enc_dec,
     request_key,
     sample_tokens,
 )
+from repro.serve.paging import PagingConfig, validate_page_size
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,12 +97,21 @@ class DecodePlan:
 
 def plan_decode(
     model: Model, params: Any, mesh: Mesh, *, batch_size: int,
-    strict: bool = True,
+    strict: bool = True, paging: Optional[PagingConfig] = None,
 ) -> DecodePlan:
     """Build the placement plan. `params` may be the real tree or its
     eval_shape aval tree — only shapes/dtypes are read. `strict=True`
     (the default) refuses a pool whose cache cannot shard its batch dim,
-    instead of silently replicating it per device."""
+    instead of silently replicating it per device.
+
+    With `paging`, the cache avals come from `model.init_cache_paged`:
+    attention K/V leaves become (n_pages, page, ...) pools whose page
+    axis sits exactly where the dense slot axis sat, so `cache_specs`
+    shards pages over the data axes with the same rule — provided
+    `n_pages` divides by the data-axis size (guarded here; the engine's
+    `PageAllocator` then hands each slot pages from its own shard's
+    contiguous range, which is the same contiguous split NamedSharding
+    makes, so a slot's pages physically live with the slot)."""
     cfg = model.cfg
     axes = shd.data_axes(cfg, mesh)
     n_data = shd._axis_size(axes, mesh)
@@ -112,7 +124,23 @@ def plan_decode(
     param_avals = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params
     )
-    cache_avals = jax.eval_shape(lambda: model.init_cache(batch_size))
+    if (
+        paging is not None
+        and model.init_cache_paged is not None
+        and validate_page_size(paging.page_size, model.attn_capacities())
+    ):
+        if paging.n_pages % max(n_data, 1):
+            raise shd.ShardingGuardError(
+                f"paged pool n_pages={paging.n_pages} not divisible by "
+                f"the mesh data axes {axes} (size {n_data})"
+            )
+        cache_avals = jax.eval_shape(
+            lambda: model.init_cache_paged(
+                batch_size, paging.n_pages, paging.page_size
+            )
+        )
+    else:
+        cache_avals = jax.eval_shape(lambda: model.init_cache(batch_size))
     pspecs = shd.param_specs(param_avals, cfg, mesh)
     cspecs = shd.cache_specs(cache_avals, cfg, mesh, strict=strict)
     # slot token/pos and (B, V)/(B, S) batches share the batch rules —
@@ -263,17 +291,22 @@ class ShardedEngine(Engine):
     def __init__(self, model: Model, params: Any, *, batch_size: int,
                  mesh: Mesh, greedy: bool = True, strict: bool = True,
                  temperature: float = 1.0, top_k: int = 0,
-                 key: Optional[jax.Array] = None):
+                 key: Optional[jax.Array] = None,
+                 paging: Optional[PagingConfig] = None,
+                 chunk_tokens: Optional[int] = None):
         # the plan must exist before Engine.__init__ runs the hooks
         self.mesh = mesh
         self._strict = strict
         self.plan = plan_decode(
-            model, params, mesh, batch_size=batch_size, strict=strict
+            model, params, mesh, batch_size=batch_size, strict=strict,
+            paging=paging,
         )
         self._adm_cells: dict[int, tuple] = {}
+        self._chunk_cells: dict[int, tuple] = {}
         super().__init__(
             model, params, batch_size=batch_size, greedy=greedy,
             temperature=temperature, top_k=top_k, key=key,
+            paging=paging, chunk_tokens=chunk_tokens,
         )
 
     def _place_params(self, params: Any) -> Any:
@@ -285,8 +318,40 @@ class ShardedEngine(Engine):
     def _place_batch(self, x: jax.Array) -> jax.Array:
         return jax.device_put(x, self.plan.token)
 
+    def _place_tbl(self, x: jax.Array) -> jax.Array:
+        # (B, span) indirection rows shard with the slots they describe
+        return jax.device_put(x, self.plan.prompts)
+
+    def _paging_shards(self) -> int:
+        return max(self.plan.n_data, 1)
+
     def _compile_decode(self) -> Callable:
         plan = self.plan
+        if self._pg is not None:
+            model, page = self.model, self._page
+            cell = obs.get().probe.track(
+                "serve.decode_step",
+                jax.jit(
+                    lambda p, c, t, pos, tbl: model.decode_step_paged(
+                        p, c, t, pos, tbl, page
+                    ),
+                    in_shardings=(
+                        plan.params, plan.cache, plan.token, plan.token,
+                        plan.prompts,
+                    ),
+                    out_shardings=(plan.logits, plan.cache),
+                ),
+            )
+
+            def pstep(params, cache, tok, pos):
+                return cell(
+                    params, cache,
+                    jax.device_put(tok, plan.token),
+                    jax.device_put(pos, plan.token),
+                    self._tbl_device(),
+                )
+
+            return pstep
         _, decode = compile_decode(self.model, plan)
         decode = obs.get().probe.track("serve.decode_step", decode)
 
@@ -328,22 +393,73 @@ class ShardedEngine(Engine):
                     out_shardings=(rplan.logits, rplan.cache),
                 ),
             )
-            seat = probe.track(
-                f"serve.seat.w{rows}",
-                jax.jit(
-                    seating.scatter_slots,
-                    in_shardings=(
-                        self.plan.cache, rplan.cache, None, None
+            if self._pg is not None:
+                # admission rows stay a dense cache (what prefill
+                # emits); seating splits their K/V rows into pages and
+                # lands each on its mapped physical page in the pool
+                seat = probe.track(
+                    f"serve.seat.w{rows}",
+                    jax.jit(
+                        functools.partial(
+                            seating.scatter_pages, layouts=self._layouts
+                        ),
+                        in_shardings=(
+                            self.plan.cache, rplan.cache, None, None,
+                            None,
+                        ),
+                        out_shardings=self.plan.cache,
+                        donate_argnums=0,
                     ),
-                    out_shardings=self.plan.cache,
-                    donate_argnums=0,
-                ),
-            )
+                )
+            else:
+                seat = probe.track(
+                    f"serve.seat.w{rows}",
+                    jax.jit(
+                        seating.scatter_slots,
+                        in_shardings=(
+                            self.plan.cache, rplan.cache, None, None
+                        ),
+                        out_shardings=self.plan.cache,
+                        donate_argnums=0,
+                    ),
+                )
             place = lambda p: jax.device_put(
                 jnp.asarray(p, jnp.int32), rplan.prompts
             )
             cell = (prefill, seat, place)
             self._adm_cells[rows] = cell
+        return cell
+
+    def _chunk_cell(self, c: int, rows: int):
+        """Per-chunk-width cell with explicit shardings: the chunk
+        cache is a dense rows cache on the admission-width plan; token
+        and position chunks shard like prompt batches. One compiled
+        cell per width (`serve.chunk.c{c}`), warm after first use."""
+        cell = self._chunk_cells.get(c)
+        if cell is None:
+            rplan = plan_decode(
+                self.model, self.params, self.mesh, batch_size=rows,
+                strict=self._strict,
+            )
+            step = obs.get().probe.track(
+                f"serve.chunk.c{c}",
+                jax.jit(
+                    _chunk_prefill_fn(self.model),
+                    in_shardings=(
+                        self.plan.params, rplan.cache, rplan.prompts,
+                        rplan.prompts, None, None,
+                    ),
+                    out_shardings=(rplan.logits, rplan.cache),
+                ),
+            )
+            init_rows = lambda: jax.device_put(
+                self.model.init_cache(rows), rplan.cache
+            )
+            place = lambda x: jax.device_put(
+                jnp.asarray(x, jnp.int32), rplan.prompts
+            )
+            cell = (step, init_rows, place)
+            self._chunk_cells[c] = cell
         return cell
 
     @property
