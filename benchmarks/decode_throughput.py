@@ -62,6 +62,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs, obs
+from repro.analysis import audit_section
 from repro.launch.mesh import make_serving_mesh, parse_mesh_spec
 from repro.models import api
 from repro.serve import engine as E
@@ -426,6 +427,11 @@ def main() -> None:
     admission = measure_admission(ARCHS[0], prompt_len=args.prompt_len)
     paged = measure_paged(ARCHS[0])
 
+    # static cell audit over everything the sweep registered:
+    # serve.decode_step / prefill / seat / chunk cells (base + sharded
+    # variants), re-lowered from captured avals (repro.analysis)
+    cell_audit = audit_section()
+
     telemetry = obs.telemetry_section()
     rec = {
         "benchmark": "decode_throughput",
@@ -437,6 +443,7 @@ def main() -> None:
         "admission": admission,
         "paged": paged,
         "telemetry": telemetry,
+        "cell_audit": cell_audit,
     }
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=1)
@@ -534,6 +541,26 @@ def main() -> None:
         k.startswith("serve.prefill.w") for k in t["recompiles"]
     ), t["recompiles"]
     assert t["peak_device_memory_bytes"] > 0, t
+
+    # cell audit gates: every registered serve cell was exercised by
+    # the sweep (avals captured) and re-lowers with zero violations —
+    # no host transfers, no f64, donations honored, collectives within
+    # the sharded cells' declared budgets
+    assert cell_audit["n_cells"] > 0
+    assert cell_audit["violations_total"] == 0, cell_audit
+    assert "serve.decode_step" in cell_audit["cells"], (
+        cell_audit["cells"].keys()
+    )
+    assert any(
+        k.startswith("serve.prefill") for k in cell_audit["cells"]
+    ), cell_audit["cells"].keys()
+    assert any(
+        k.startswith("serve.seat") for k in cell_audit["cells"]
+    ), cell_audit["cells"].keys()
+    print(
+        f"[decode_throughput] cell audit: {cell_audit['n_cells']} "
+        f"cells, 0 violations"
+    )
 
 
 if __name__ == "__main__":

@@ -60,6 +60,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro import configs, obs, optim
+from repro.analysis import audit_section
 from repro.data import lm
 from repro.launch.hlo_count import weighted_cost
 from repro.models import api
@@ -166,7 +167,9 @@ def sweep(grads, pod_counts) -> list[dict]:
         eg = modeled_egress(grads, n)
         for scheme in SCHEMES:
             fn, args = _reduction_fn(scheme, mesh, grads)
-            obs.get().probe.track(f"dist.reduce.{scheme}.n{n}", fn)
+            fn = obs.get().probe.track(
+                f"dist.reduce.{scheme}.n{n}", fn
+            )
             wc = weighted_cost(fn.lower(*args).compile().as_text())
             cells.append({
                 "n_pods": n,
@@ -294,6 +297,15 @@ def check(rec: dict) -> None:
             mode, t["recompiles"]
         )
     assert t["peak_device_memory_bytes"] > 0, t
+    # static cell audit: every registered jit cell re-lowered clean —
+    # avals captured, no host callbacks/transfers, no f64, donations
+    # honored, collectives within any declared budget
+    ca = rec["cell_audit"]
+    assert ca["n_cells"] > 0
+    assert ca["violations_total"] == 0, ca
+    assert any(k.startswith("dist.reduce.") for k in ca["cells"]), ca
+    for mode in ("f32", "gather", "two_stage"):
+        assert f"train.dp_step.{mode}" in ca["cells"], ca["cells"].keys()
 
 
 def run(arch: str, out_path: str, *, steps: int,
@@ -312,6 +324,7 @@ def run(arch: str, out_path: str, *, steps: int,
     obs.configure(enabled=True)
     cfg, grads = grad_tree(arch)
     rec = {
+        "benchmark": "dist_compression",
         "arch": cfg.name,
         "n_devices": n_dev,
         "grad_leaves": len(jax.tree.leaves(grads)),
@@ -319,6 +332,9 @@ def run(arch: str, out_path: str, *, steps: int,
         "sweep": sweep(grads, pod_counts),
         "convergence": convergence(arch, steps),
         "telemetry": obs.telemetry_section(),
+        # every reduction / dp-step jit cell the sweep registered,
+        # re-lowered and statically audited (repro.analysis)
+        "cell_audit": audit_section(),
     }
     check(rec)
     rec["checked"] = True

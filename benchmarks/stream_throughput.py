@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import obs
+from repro.analysis import audit_section
 from repro.core import compiler, vadetect
 from repro.launch.stream import make_data_mesh
 from repro.stream import (
@@ -308,13 +309,21 @@ def main() -> None:
     telemetry = obs.telemetry_section()
     telemetry["overhead"] = overhead
 
+    # static cell audit over the probe registry (stream.classify.*
+    # from the sweep runners + stream.vote): re-lower each cell from
+    # its captured call avals and check host-transfer/f64/donation/
+    # budget properties (repro.analysis.cellaudit)
+    cell_audit = audit_section()
+
     rec = {
+        "benchmark": "stream_throughput",
         "n_host_devices": jax.device_count(),
         "chip_latency_us": program.report.latency_s * 1e6,
         "cells": cells,
         "scaling_largest_bucket": scaling,
         "realtime_1000_patients": realtime,
         "telemetry": telemetry,
+        "cell_audit": cell_audit,
     }
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=1)
@@ -352,6 +361,14 @@ def main() -> None:
         for k, v in t["recompiles"].items()
     ), t["recompiles"]
     assert t["peak_device_memory_bytes"] > 0, t
+    # cell audit gates: the classify + vote cells must all have been
+    # exercised (avals captured) and re-lower with zero violations
+    assert cell_audit["n_cells"] > 0
+    assert cell_audit["violations_total"] == 0, cell_audit
+    assert any(
+        k.startswith("stream.classify") for k in cell_audit["cells"]
+    ), cell_audit["cells"].keys()
+    assert "stream.vote" in cell_audit["cells"], cell_audit["cells"].keys()
     # strict wall-clock assert only when the host can resolve a 3%
     # A/B (disabled-side spread within the margin); on a noisy shared
     # VM the ratio is below measurement resolution — record it and

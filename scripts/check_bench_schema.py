@@ -28,6 +28,17 @@ Per-benchmark sections (keyed on the record's "benchmark" name):
     returning to its initial value after drain, and zero recompiles
     after warmup — the paged section falling out of the bench (or the
     tenancy win regressing) fails here.
+  * decode_throughput / stream_throughput / dist_compression must
+    carry the static "cell_audit" section (`repro.analysis.
+    audit_section()`): every jit cell the warmup registered,
+    re-lowered from its captured avals, with zero violations — the
+    audit falling out of a bench (or a committed record carrying a
+    violation) fails here.
+
+Analysis reports (emitted by `python -m repro.analysis --json`, keyed
+on "report" == "analysis") are validated instead against the analyzer
+schema: current schema_version, nonzero files_scanned, a populated
+rule catalog, zero live findings and zero stale baseline entries.
 """
 
 from __future__ import annotations
@@ -136,6 +147,92 @@ def _check_paged(path: str, rec: dict) -> list[str]:
     return errors
 
 
+# benchmarks whose records must carry the repro.analysis cell audit
+CELL_AUDIT_BENCHMARKS = (
+    "decode_throughput", "stream_throughput", "dist_compression"
+)
+
+
+def _check_cell_audit(path: str, rec: dict) -> list[str]:
+    ca = rec.get("cell_audit")
+    if not isinstance(ca, dict):
+        return [f"{path}: {rec.get('benchmark')} record has no "
+                f"'cell_audit' (repro.analysis) section"]
+    errors = []
+    if not isinstance(ca.get("n_cells"), int) or ca["n_cells"] < 1:
+        errors.append(f"{path}: cell_audit covers no cells")
+    if ca.get("violations_total") != 0:
+        errors.append(
+            f"{path}: cell_audit carries "
+            f"{ca.get('violations_total')!r} violation(s) — a "
+            f"committed record must audit clean"
+        )
+    cells = ca.get("cells")
+    if not isinstance(cells, dict) or not cells:
+        errors.append(f"{path}: cell_audit 'cells' map missing/empty")
+        return errors
+    if isinstance(ca.get("n_cells"), int) and len(cells) != ca["n_cells"]:
+        errors.append(
+            f"{path}: cell_audit n_cells {ca['n_cells']} != "
+            f"{len(cells)} cells listed"
+        )
+    for name, cell in cells.items():
+        if not isinstance(cell, dict) or not isinstance(
+                cell.get("violations"), list):
+            errors.append(
+                f"{path}: cell_audit cell {name!r} malformed"
+            )
+        elif cell["violations"]:
+            errors.append(
+                f"{path}: cell {name!r}: {cell['violations'][0]}"
+            )
+        if isinstance(cell, dict) and not isinstance(
+                cell.get("collectives"), dict):
+            errors.append(
+                f"{path}: cell {name!r} missing collective inventory"
+            )
+    return errors
+
+
+def _check_analysis(path: str, rec: dict) -> list[str]:
+    from repro import analysis
+
+    errors = []
+    v = rec.get("schema_version")
+    if v != analysis.SCHEMA_VERSION:
+        errors.append(
+            f"{path}: analysis schema_version {v!r}, expected "
+            f"{analysis.SCHEMA_VERSION}"
+        )
+    if not isinstance(rec.get("files_scanned"), int) or (
+            rec["files_scanned"] < 1):
+        errors.append(f"{path}: analysis report scanned no files")
+    rules = rec.get("rules")
+    if not isinstance(rules, list) or not rules:
+        errors.append(f"{path}: analysis rule catalog missing/empty")
+    else:
+        for r in rules:
+            if not isinstance(r, dict) or not all(
+                    isinstance(r.get(k), str)
+                    for k in ("id", "summary", "incident")):
+                errors.append(
+                    f"{path}: malformed rule entry {r!r}"
+                )
+    if rec.get("findings") != []:
+        errors.append(
+            f"{path}: analysis report carries live findings — the "
+            f"tree must be clean (fix or suppress with a pragma)"
+        )
+    if rec.get("stale_baseline") != []:
+        errors.append(
+            f"{path}: analysis baseline is stale (entries no longer "
+            f"match live findings — prune analysis_baseline.json)"
+        )
+    if not isinstance(rec.get("suppressed"), list):
+        errors.append(f"{path}: analysis 'suppressed' list missing")
+    return errors
+
+
 def check_file(path: str, schema_version: int) -> list[str]:
     errors = []
     try:
@@ -143,6 +240,8 @@ def check_file(path: str, schema_version: int) -> list[str]:
             rec = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
         return [f"{path}: unreadable ({e})"]
+    if rec.get("report") == "analysis":
+        return _check_analysis(path, rec)
     tel = rec.get("telemetry")
     if not isinstance(tel, dict):
         return [f"{path}: no 'telemetry' section"]
@@ -161,6 +260,8 @@ def check_file(path: str, schema_version: int) -> list[str]:
         errors.extend(_check_frontend(path, rec))
     if rec.get("benchmark") == "decode_throughput":
         errors.extend(_check_paged(path, rec))
+    if rec.get("benchmark") in CELL_AUDIT_BENCHMARKS:
+        errors.extend(_check_cell_audit(path, rec))
     return errors
 
 

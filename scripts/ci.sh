@@ -42,6 +42,13 @@ for a in "$@"; do
   esac
 done
 
+# Static analysis gate (repro.analysis): the repo-specific AST rule
+# pack over src/ + scripts/ + benchmarks/ + examples/. Zero unsuppressed
+# findings and a non-stale baseline or the lane fails — this is the
+# fast lane's cheapest, earliest signal (the compiled-cell audit runs
+# inside the benchmark smokes below, after their warmups).
+python -m repro.analysis --fail-on-findings --json /tmp/analysis_ci.json
+
 if [[ "$FAST" == 1 ]]; then
   python -m pytest -x -q -m "not slow" ${PYTEST_ARGS+"${PYTEST_ARGS[@]}"}
   exit 0
@@ -152,6 +159,9 @@ done
 
 # Bench-schema guard: committed and CI-emitted BENCH records must all
 # carry the shared telemetry section at the expected schema_version —
-# a benchmark silently dropping telemetry fails here instead of
-# rotting.
-python scripts/check_bench_schema.py BENCH_*.json /tmp/BENCH_*_ci.json
+# and decode/stream/dist records the clean repro.analysis cell_audit
+# section (every warmed jit cell re-lowered: no host transfers, no
+# f64, donations honored, collectives within declared budgets). The
+# analyzer's own JSON report is validated against the same guard.
+python scripts/check_bench_schema.py BENCH_*.json /tmp/BENCH_*_ci.json \
+  /tmp/analysis_ci.json

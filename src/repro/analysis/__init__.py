@@ -1,0 +1,40 @@
+"""`repro.analysis`: repo-specific static analysis, gating CI.
+
+Two halves, one contract — the bug classes this repo has already paid
+for at runtime must fail CI *before* they ship:
+
+  * **AST rule pack** (`astpass`, `rules`) — ≥8 lints, each encoding a
+    historical incident from CHANGES.md: the PR 8 `mark_urgent([])`
+    float64-index crash becomes `np-index-dtype`; the PR 6 silent
+    double-compile family becomes `traced-python-branch` /
+    `numpy-in-jit`; the PR 8 single-driver-thread convention becomes
+    `driver-thread-affinity`; the PR 6 disabled-telemetry overhead
+    budget becomes `telemetry-eager-format`; and so on (see
+    docs/analysis_rules.md for the full catalog).
+  * **Compiled-cell auditor** (`cellaudit`, `hloscan`) — walks the
+    `obs.jaxprobe` named-cell registry after benchmark warmup, re-lowers
+    every cell from its captured call avals, and asserts zero host
+    callbacks, zero f64 ops, zero dropped donations, declared-sharded
+    outputs actually sharded, and a collective inventory within each
+    cell's declared comm budget (generalizing tests/test_hlo_count.py
+    from hand-picked cases to every registered cell).
+
+CLI: `python -m repro.analysis [paths] [--json OUT]`; exit 0 clean,
+1 on unsuppressed findings, 2 on usage errors or a stale baseline.
+Suppression: `# repro: allow[rule-id] reason` on (or one line above)
+the flagged line, or a checked-in `analysis_baseline.json` whose every
+entry must still match a live finding.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.astpass import (  # noqa: F401
+    Finding,
+    ScanResult,
+    load_baseline,
+    scan_paths,
+)
+from repro.analysis.cellaudit import audit_cells, audit_section  # noqa: F401
+from repro.analysis.rules import RULES  # noqa: F401
+
+SCHEMA_VERSION = 1

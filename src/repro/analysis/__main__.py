@@ -1,0 +1,116 @@
+"""CLI: `python -m repro.analysis [paths...] [options]`.
+
+Scans the given paths (default: `src/ scripts/ benchmarks/ examples/`,
+whichever exist) with the full rule pack,
+prints typed `path:line: rule: message` findings, optionally writes
+the JSON report `scripts/check_bench_schema.py` validates, and exits:
+
+    0  clean (no unsuppressed findings, baseline fresh)
+    1  unsuppressed findings
+    2  usage error / unreadable baseline / stale baseline entries
+
+`--baseline` defaults to `analysis_baseline.json` at the repo root
+when it exists. `--no-fail` reports without gating (exploration mode);
+CI runs the default gating behavior (`--fail-on-findings` is accepted
+as an explicit alias).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro import analysis
+from repro.analysis import astpass
+from repro.analysis.rules import RULES
+
+
+def find_root(start: Path) -> Path:
+    """Nearest ancestor containing .git or pyproject.toml (else cwd) —
+    findings are reported relative to it so baseline entries are
+    machine-independent."""
+    for p in [start] + list(start.parents):
+        if (p / ".git").exists() or (p / "pyproject.toml").exists():
+            return p
+    return start
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific AST rule pack (see "
+                    "docs/analysis_rules.md)",
+    )
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to scan (default: src/ scripts/ "
+                         "benchmarks/ examples/)")
+    ap.add_argument("--json", metavar="OUT",
+                    help="write the JSON analysis report here")
+    ap.add_argument("--baseline", metavar="FILE", default=None,
+                    help="baseline suppression file (default: "
+                         "analysis_baseline.json at the repo root)")
+    ap.add_argument("--fail-on-findings", action="store_true",
+                    help="exit 1 on unsuppressed findings (the "
+                         "default; kept explicit for CI readability)")
+    ap.add_argument("--no-fail", action="store_true",
+                    help="report only; always exit 0 unless the "
+                         "baseline is stale")
+    args = ap.parse_args(argv)
+
+    root = find_root(Path.cwd())
+    paths = args.paths or [
+        p for p in (root / "src", root / "scripts",
+                    root / "benchmarks", root / "examples")
+        if p.exists()
+    ] or [root / "src"]
+
+    baseline, baseline_path = [], args.baseline
+    if baseline_path is None:
+        default = root / "analysis_baseline.json"
+        if default.exists():
+            baseline_path = str(default)
+    if baseline_path:
+        try:
+            baseline = astpass.load_baseline(baseline_path)
+        except (OSError, ValueError, KeyError) as e:
+            print(f"[analysis] unreadable baseline "
+                  f"{baseline_path}: {e}", file=sys.stderr)
+            return 2
+
+    result = astpass.scan_paths(paths, RULES, baseline=baseline, root=root)
+
+    for f in result.findings:
+        print(f"{f.location()}: {f.rule}: {f.message}")
+    if args.json:
+        report = result.to_report(analysis.SCHEMA_VERSION, RULES)
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+
+    if result.stale_baseline:
+        for e in result.stale_baseline:
+            print(
+                f"[analysis] STALE baseline entry (no live finding "
+                f"matches): {e['rule']} @ {e['path']}: {e['snippet']!r}",
+                file=sys.stderr,
+            )
+        print(
+            f"[analysis] {len(result.stale_baseline)} stale baseline "
+            f"entr{'y' if len(result.stale_baseline) == 1 else 'ies'} — "
+            f"remove them from {baseline_path}", file=sys.stderr,
+        )
+        return 2
+
+    n = len(result.findings)
+    print(
+        f"[analysis] {result.files_scanned} files, {len(RULES)} rules: "
+        f"{n} finding(s), {len(result.suppressed)} suppressed"
+    )
+    if n and not args.no_fail:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,180 @@
+"""Compiled-cell auditor: re-lower every registered jit cell and
+assert its static safety properties.
+
+Walks `obs.jaxprobe`'s named-cell registry (`probe.cells()`), re-traces
+each cell from the argument avals its `TrackedCell` wrapper captured at
+first real call, and checks — before any of this ships — the
+properties the benchmarks used to assert only pointwise:
+
+  * **captured** — a registered cell that was never called has no
+    avals; coverage is part of the contract, so that's a violation,
+    not a skip.
+  * **no host callbacks** — the jaxpr holds no callback primitives
+    (`pure_callback` / `io_callback` / `debug_callback`), and the
+    optimized HLO no infeed/outfeed/send/recv or python-callback
+    custom-calls (`hloscan.host_transfer_ops`).
+  * **no f64** — mixed-bit-width means *down*, never up; an f64 type
+    anywhere in the module is an unpinned-default leak.
+  * **donation honored** — cells declaring `donate=(...)` must lower
+    without XLA's "donated buffers were not usable" warning and carry
+    an `input_output_alias` in the module header.
+  * **sharded outputs stay sharded** — cells declaring
+    `sharded_outputs=True` must not compile to all-fully-replicated
+    outputs (the PR 4/9 silent-replication class).
+  * **collective budget** — the loop-aware collective inventory must
+    stay within the cell's declared `budget` (op -> max count; absent
+    ops are allowed zero; cells with no declared budget skip this
+    gate), generalizing tests/test_hlo_count.py to every registered
+    cell.
+
+The AOT path (`fn.trace(...).lower().compile()`) does not populate the
+jit dispatch cache, so auditing after warmup does not disturb the
+zero-recompile guards the benchmarks also assert.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+from repro.analysis import hloscan
+
+
+@dataclasses.dataclass
+class CellAudit:
+    """Audit outcome for one cell; `violations` empty means clean."""
+
+    name: str
+    violations: list
+    collectives: dict = dataclasses.field(default_factory=dict)
+    donation_aliased: Optional[bool] = None
+
+    def to_dict(self) -> dict:
+        return {
+            "violations": list(self.violations),
+            "collectives": dict(self.collectives),
+            "donation_aliased": self.donation_aliased,
+        }
+
+
+_CALLBACK_MARKERS = ("callback", "outside_call")
+
+
+def _jaxpr_callbacks(jaxpr, out=None) -> list:
+    """Names of callback primitives anywhere in a (closed) jaxpr,
+    including sub-jaxprs carried in eqn params (scan/while/cond/...)."""
+    out = [] if out is None else out
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in inner.eqns:
+        name = eqn.primitive.name
+        if any(m in name for m in _CALLBACK_MARKERS):
+            out.append(name)
+        for p in eqn.params.values():
+            for sub in p if isinstance(p, (tuple, list)) else (p,):
+                if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                    _jaxpr_callbacks(sub, out)
+    return out
+
+
+def audit_cell(info) -> CellAudit:
+    """Audit one `obs.jaxprobe.CellInfo`; never raises — failures to
+    trace/lower are themselves violations."""
+    v = []
+    if info.call_avals is None:
+        return CellAudit(name=info.name, violations=[
+            "never called: no argument avals captured, cell is "
+            "unaudited (warmup must cover every registered cell)"
+        ])
+    args, kwargs = info.call_avals
+    try:
+        traced = info.fn.trace(*args, **kwargs)
+    except Exception as e:  # noqa: BLE001 — report, don't crash the audit
+        return CellAudit(name=info.name, violations=[
+            f"trace from captured avals failed: {type(e).__name__}: {e}"
+        ])
+
+    for name in sorted(set(_jaxpr_callbacks(traced.jaxpr))):
+        v.append(f"host callback primitive in jaxpr: {name}")
+
+    try:
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            compiled = traced.lower().compile()
+        for w in caught:
+            if "donat" in str(w.message).lower():
+                v.append(f"dropped donation: {w.message}")
+    except Exception as e:  # noqa: BLE001
+        v.append(f"lower/compile failed: {type(e).__name__}: {e}")
+        return CellAudit(name=info.name, violations=v)
+
+    text = compiled.as_text()
+    f64 = hloscan.f64_lines(text)
+    if f64:
+        v.append(
+            f"{len(f64)} f64 op(s) in optimized HLO "
+            f"(first at line {f64[0]})"
+        )
+    for line, op in hloscan.host_transfer_ops(text):
+        v.append(f"host transfer op in optimized HLO: {op} (line {line})")
+
+    aliased = None
+    if info.donate:
+        aliased = hloscan.has_input_output_alias(text)
+        if not aliased:
+            v.append(
+                f"declared donate={tuple(info.donate)} but the module "
+                f"header has no input_output_alias — donation dropped"
+            )
+
+    counts = hloscan.collective_counts(text)
+    if info.budget is not None:
+        # unbudgeted cells skip the inventory gate (a declared budget
+        # of {} means "zero collectives allowed" — different thing)
+        for op, n, allowed in hloscan.over_budget(counts, info.budget):
+            v.append(
+                f"collective budget exceeded: {op} x{n} > {allowed} "
+                f"(declared budget {info.budget})"
+            )
+
+    if info.sharded_outputs:
+        try:
+            import jax
+
+            leaves = jax.tree.leaves(compiled.output_shardings)
+            if leaves and all(
+                    s.is_fully_replicated for s in leaves):
+                v.append(
+                    "declared sharded_outputs but every compiled "
+                    "output is fully replicated"
+                )
+        except Exception as e:  # noqa: BLE001
+            v.append(f"output-sharding check failed: {e}")
+
+    return CellAudit(
+        name=info.name, violations=v, collectives=counts,
+        donation_aliased=aliased,
+    )
+
+
+def audit_cells(cells=None) -> dict:
+    """name -> CellAudit over `cells` (default: the live probe's
+    registry)."""
+    if cells is None:
+        from repro import obs
+
+        cells = obs.get().probe.cells()
+    return {name: audit_cell(info) for name, info in cells.items()}
+
+
+def audit_section(cells=None) -> dict:
+    """JSON-able BENCH record section; benchmarks attach this under
+    "cell_audit" and assert violations_total == 0."""
+    audits = audit_cells(cells)
+    return {
+        "n_cells": len(audits),
+        "violations_total": sum(
+            len(a.violations) for a in audits.values()
+        ),
+        "cells": {name: a.to_dict() for name, a in audits.items()},
+    }

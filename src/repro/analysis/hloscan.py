@@ -1,0 +1,94 @@
+"""Textual checks over one compiled cell's optimized HLO.
+
+Pure functions over `compiled.as_text()` — no jax imports — so the
+scans are unit-testable against literal HLO snippets. The collective
+inventory reuses `repro.launch.hlo_count.weighted_cost` (loop-aware:
+a collective inside a while body counts once per trip), which is the
+same parser tests/test_hlo_count.py pins down.
+
+What each scan encodes:
+
+  * **f64** — the accelerator story is mixed *low* precision (int4/
+    int8 activations, f32 accumulation at most); a single f64 op means
+    an unpinned Python float/np default leaked into a traced value.
+  * **host ops** — decode/stream/train hot cells must stay device-
+    resident: callbacks lower to `custom-call` targets carrying
+    "callback"/"python" markers, and infeed/outfeed/send/recv are
+    host-transfer primitives by definition.
+  * **donation** — when a jit declares `donate_argnums`, the optimized
+    module header must carry an `input_output_alias` map; XLA dropping
+    the donation (shape/layout mismatch) silently doubles the pool's
+    memory residency.
+"""
+
+from __future__ import annotations
+
+import re
+
+from repro.launch.hlo_count import weighted_cost
+
+F64_RE = re.compile(r"\bf64\[")
+_HOST_OPS = ("infeed(", "outfeed(", "send(", "send-done(",
+             "recv(", "recv-done(")
+_HOST_CUSTOM_CALL_MARKERS = ("callback", "python", "host")
+_CUSTOM_CALL_TARGET_RE = re.compile(r'custom_call_target="([^"]+)"')
+ALIAS_RE = re.compile(r"input_output_alias=\{([^}]*(?:\{[^}]*\}[^}]*)*)\}")
+
+
+def f64_lines(text: str) -> list:
+    """1-based line numbers of ops touching an f64 type."""
+    return [
+        i for i, line in enumerate(text.splitlines(), 1)
+        if F64_RE.search(line)
+    ]
+
+
+def host_transfer_ops(text: str) -> list:
+    """Host-boundary ops in the module: infeed/outfeed/send/recv plus
+    custom-calls whose target smells like a Python host callback."""
+    out = []
+    for i, line in enumerate(text.splitlines(), 1):
+        s = line.strip()
+        op = s.split("=", 1)[-1].lstrip()
+        if any(op.startswith(h) or f" {h}" in op for h in _HOST_OPS):
+            out.append((i, op.split("(", 1)[0].strip()))
+            continue
+        m = _CUSTOM_CALL_TARGET_RE.search(line)
+        if m and any(k in m.group(1).lower()
+                     for k in _HOST_CUSTOM_CALL_MARKERS):
+            out.append((i, m.group(1)))
+    return out
+
+
+def has_input_output_alias(text: str) -> bool:
+    """True if the HloModule header declares any input/output alias —
+    the positive signal that a declared donation survived XLA."""
+    for line in text.splitlines():
+        if line.startswith("HloModule"):
+            m = ALIAS_RE.search(line)
+            return bool(m and m.group(1).strip())
+    return False
+
+
+def collective_counts(text: str) -> dict:
+    """op name -> loop-aware occurrence count in the optimized module."""
+    return {
+        k: int(v)
+        for k, v in weighted_cost(text).collective_counts.items()
+        if v
+    }
+
+
+def over_budget(counts: dict, budget: dict) -> list:
+    """(op, count, allowed) rows where the inventory exceeds the
+    declared budget. `budget` maps op name -> max count; ops absent
+    from the budget are allowed zero occurrences; an allowance of
+    "*" (or a negative count) means unbounded."""
+    rows = []
+    for op, n in sorted(counts.items()):
+        allowed = budget.get(op, 0)
+        if allowed == "*" or (isinstance(allowed, int) and allowed < 0):
+            continue
+        if n > int(allowed):
+            rows.append((op, n, int(allowed)))
+    return rows

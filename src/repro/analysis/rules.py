@@ -1,0 +1,759 @@
+"""The repo-specific AST rule pack.
+
+Every rule encodes a bug class this repo has already hit (or nearly
+hit) at runtime — the PR number in each rule's `incident` points at
+the CHANGES.md entry that motivated it; docs/analysis_rules.md is the
+narrative catalog. Rules are deliberately repo-shaped: they know the
+telemetry emission surface, the seating-cell names, and the frontend's
+single-driver-thread convention, trading generality for a near-zero
+false-positive rate on this codebase.
+
+Each rule is an object with `rule_id` / `summary` / `incident` and a
+`check(ctx, info) -> list[Finding]`; cross-file rules also implement
+`prepare(ctx)` (run once over the whole file set before any check).
+"""
+
+from __future__ import annotations
+
+import ast
+
+# dotted-name helpers -------------------------------------------------------
+
+
+def dotted(node) -> str:
+    """'jax.random.normal' for an Attribute/Name chain, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def terminal_name(node) -> str:
+    """Last identifier of a Name/Attribute ('scatter_pages' for
+    `seating.scatter_pages`), '' otherwise."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def iter_scopes(tree):
+    """Yield (scope_node, body_stmts) for the module and every
+    function def, at any nesting depth."""
+    yield tree, tree.body
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node, node.body
+
+
+def walk_scope(stmts):
+    """Walk every node under `stmts` without descending into nested
+    function/class defs (those get their own scope)."""
+    stack = list(stmts)
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                continue
+            stack.append(child)
+
+
+def _jit_decorated(fn) -> bool:
+    """True if `fn` carries a jax.jit / @partial(jax.jit, ...)
+    decorator."""
+    for dec in fn.decorator_list:
+        d = dec.func if isinstance(dec, ast.Call) else dec
+        name = dotted(d)
+        if name in ("jax.jit", "jit"):
+            return True
+        if name in ("functools.partial", "partial"):
+            if (isinstance(dec, ast.Call) and dec.args
+                    and dotted(dec.args[0]) in ("jax.jit", "jit")):
+                return True
+    return False
+
+
+def _jit_static_names(fn) -> set:
+    """Param names a jit decorator marks static (not traced)."""
+    out = set()
+    params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    for dec in fn.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        kwargs = {k.arg: k.value for k in dec.keywords if k.arg}
+        names = kwargs.get("static_argnames")
+        if isinstance(names, ast.Constant) and isinstance(names.value, str):
+            out.add(names.value)
+        elif isinstance(names, (ast.Tuple, ast.List)):
+            out.update(
+                e.value for e in names.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)
+            )
+        nums = kwargs.get("static_argnums")
+        idxs = []
+        if isinstance(nums, ast.Constant) and isinstance(nums.value, int):
+            idxs = [nums.value]
+        elif isinstance(nums, (ast.Tuple, ast.List)):
+            idxs = [
+                e.value for e in nums.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, int)
+            ]
+        for i in idxs:
+            if 0 <= i < len(params):
+                out.add(params[i])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# np-index-dtype — the PR 8 `mark_urgent([])` class
+# ---------------------------------------------------------------------------
+
+_NP_CTORS = ("np.asarray", "np.array", "numpy.asarray", "numpy.array")
+_INDEX_CONSUMERS = (
+    "np.nonzero", "np.flatnonzero", "np.argwhere", "np.where",
+    "numpy.nonzero", "numpy.flatnonzero", "numpy.argwhere", "numpy.where",
+)
+_BITOPS = (ast.BitOr, ast.BitAnd, ast.BitXor)
+
+
+def _unpinned_np_call(node):
+    """The np.asarray/np.array Call node if it has no dtype pin."""
+    if (isinstance(node, ast.Call) and dotted(node.func) in _NP_CTORS
+            and len(node.args) == 1
+            and not any(k.arg == "dtype" for k in node.keywords)):
+        return node
+    return None
+
+
+class NpIndexDtypeRule:
+    rule_id = "np-index-dtype"
+    summary = ("dtype-unpinned np.asarray/np.array result used as an "
+               "index or boolean mask")
+    incident = ("PR 8: `mark_urgent([])` — an empty Python list becomes "
+                "float64, crashing integer indexing only on the "
+                "empty-input path")
+
+    def check(self, ctx, info):
+        findings = []
+        flagged = set()
+
+        def flag(call_node, how):
+            if id(call_node) in flagged:
+                return
+            flagged.add(id(call_node))
+            findings.append(info.finding(
+                self.rule_id, call_node,
+                f"{ast.unparse(call_node.func)}(...) without an explicit "
+                f"dtype is {how}; an empty input defaults to float64 "
+                f"(pin dtype=bool / np.intp)",
+            ))
+
+        for _scope, body in iter_scopes(info.tree):
+            tracked = {}
+            for node in walk_scope(body):
+                if (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)):
+                    call = _unpinned_np_call(node.value)
+                    if call is not None:
+                        tracked[node.targets[0].id] = call
+
+            def resolve(expr):
+                call = _unpinned_np_call(expr)
+                if call is not None:
+                    return call
+                if isinstance(expr, ast.Name):
+                    return tracked.get(expr.id)
+                return None
+
+            for node in walk_scope(body):
+                if isinstance(node, ast.Subscript):
+                    idx = node.slice
+                    parts = idx.elts if isinstance(idx, ast.Tuple) else [idx]
+                    for p in parts:
+                        call = resolve(p)
+                        if call is not None:
+                            flag(call, "used as a subscript index")
+                elif isinstance(node, ast.BinOp) and isinstance(
+                        node.op, _BITOPS):
+                    for p in (node.left, node.right):
+                        call = resolve(p)
+                        if call is not None:
+                            flag(call, "combined with a bitwise mask op")
+                elif isinstance(node, ast.UnaryOp) and isinstance(
+                        node.op, ast.Invert):
+                    call = resolve(node.operand)
+                    if call is not None:
+                        flag(call, "inverted as a boolean mask")
+                elif (isinstance(node, ast.Call)
+                      and dotted(node.func) in _INDEX_CONSUMERS):
+                    for p in node.args:
+                        call = resolve(p)
+                        if call is not None:
+                            flag(call, "fed to an index-producing "
+                                       "numpy reduction")
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# prng-key-reuse
+# ---------------------------------------------------------------------------
+
+_KEY_NONCONSUMING = {
+    "split", "fold_in", "PRNGKey", "key", "wrap_key_data", "key_data",
+    "clone", "key_impl",
+}
+
+
+def _key_expr_text(node):
+    """Stable text for a key argument worth tracking: a bare name or a
+    constant-indexed subscript (`ks[0]`)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if (isinstance(node, ast.Subscript)
+            and isinstance(node.value, ast.Name)
+            and isinstance(node.slice, ast.Constant)):
+        return f"{node.value.id}[{node.slice.value!r}]"
+    return None
+
+
+def _base_name(text):
+    return text.split("[")[0]
+
+
+class PrngKeyReuseRule:
+    rule_id = "prng-key-reuse"
+    summary = ("PRNG key consumed by two samplers without a split/"
+               "fold_in between the uses")
+    incident = ("PR 3/7: every serving/stream path derives per-request "
+                "keys via fold_in; reusing a raw key correlates "
+                "'independent' samples silently")
+
+    def check(self, ctx, info):
+        findings = []
+        for scope, body in iter_scopes(info.tree):
+            if isinstance(scope, ast.Module):
+                continue
+            events = []
+            self._collect(body, (), events)
+            last_use = {}
+            for kind, text, node, path in events:
+                if kind == "assign":
+                    for t in list(last_use):
+                        if _base_name(t) == text:
+                            del last_use[t]
+                    continue
+                prev = last_use.get(text)
+                if prev is not None and self._compatible(prev[1], path):
+                    findings.append(info.finding(
+                        self.rule_id, node,
+                        f"PRNG key `{text}` already consumed on line "
+                        f"{prev[0].lineno}; split or fold_in before "
+                        f"sampling again",
+                    ))
+                last_use[text] = (node, path)
+        return findings
+
+    @staticmethod
+    def _compatible(a, b):
+        """True unless the two branch paths take different arms of the
+        same `if` (mutually exclusive code)."""
+        arms_a = dict(a)
+        return all(arms_a.get(i, arm) == arm for i, arm in b)
+
+    @staticmethod
+    def _terminates(stmts) -> bool:
+        return bool(stmts) and isinstance(
+            stmts[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break)
+        )
+
+    def _collect(self, stmts, path, events):
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue
+            if isinstance(st, ast.If):
+                self._stmt_events(st.test, path, events)
+                self._collect(st.body, path + ((id(st), 0),), events)
+                self._collect(st.orelse, path + ((id(st), 1),), events)
+                # a terminating arm means the rest of this block only
+                # runs on the *other* arm — keeps `if ...: return`
+                # ladders (mutually exclusive uses) from conflicting
+                if self._terminates(st.body):
+                    path = path + ((id(st), 1),)
+                elif self._terminates(st.orelse):
+                    path = path + ((id(st), 0),)
+                continue
+            self._stmt_events(st, path, events)
+
+    def _stmt_events(self, st, path, events):
+        for node in ast.walk(st):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(node, ast.Call):
+                name = dotted(node.func)
+                if (name.startswith("jax.random.")
+                        and name.rsplit(".", 1)[1]
+                        not in _KEY_NONCONSUMING and node.args):
+                    text = _key_expr_text(node.args[0])
+                    if text is not None:
+                        events.append(("use", text, node, path))
+            elif isinstance(node, (ast.Assign, ast.AugAssign,
+                                   ast.AnnAssign, ast.For)):
+                targets = (
+                    node.targets if isinstance(node, ast.Assign)
+                    else [node.target]
+                )
+                for t in targets:
+                    elts = t.elts if isinstance(
+                        t, (ast.Tuple, ast.List)) else [t]
+                    for e in elts:
+                        if isinstance(e, ast.Name):
+                            events.append(("assign", e.id, e, path))
+        events.sort(key=lambda ev: (ev[2].lineno, ev[2].col_offset))
+
+
+# ---------------------------------------------------------------------------
+# traced-python-branch — the recompile/ConcretizationError class
+# ---------------------------------------------------------------------------
+
+_SAFE_ATTRS = {"shape", "ndim", "dtype", "size"}
+_SAFE_CALLS = {"len", "isinstance", "hasattr"}
+
+
+class TracedPythonBranchRule:
+    rule_id = "traced-python-branch"
+    summary = ("Python if/while on a traced value inside a jitted "
+               "function (ConcretizationError or a silent recompile "
+               "per value)")
+    incident = ("PR 6: the recompile-visibility work exists because "
+                "value-dependent Python control flow turns one "
+                "compiled cell into one cache entry per value")
+
+    def check(self, ctx, info):
+        findings = []
+        for node in ast.walk(info.tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            if not _jit_decorated(node):
+                continue
+            a = node.args
+            params = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+            params -= _jit_static_names(node)
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.If, ast.While)):
+                    bad = self._traced_names(sub.test, params)
+                    if bad:
+                        kw = "while" if isinstance(sub, ast.While) else "if"
+                        findings.append(info.finding(
+                            self.rule_id, sub,
+                            f"Python `{kw}` on traced value(s) "
+                            f"{sorted(bad)} inside jitted "
+                            f"`{node.name}`; use jnp.where / "
+                            f"lax.cond or mark the arg static",
+                        ))
+        return findings
+
+    @staticmethod
+    def _traced_names(test, params):
+        safe_ids = set()
+        for node in ast.walk(test):
+            if (isinstance(node, ast.Attribute)
+                    and node.attr in _SAFE_ATTRS):
+                for sub in ast.walk(node):
+                    safe_ids.add(id(sub))
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Name)
+                  and node.func.id in _SAFE_CALLS):
+                for sub in ast.walk(node):
+                    safe_ids.add(id(sub))
+            elif (isinstance(node, ast.Compare)
+                  and all(isinstance(op, (ast.Is, ast.IsNot))
+                          for op in node.ops)
+                  and all(isinstance(c, ast.Constant)
+                          for c in node.comparators)):
+                for sub in ast.walk(node):
+                    safe_ids.add(id(sub))
+        return {
+            n.id for n in ast.walk(test)
+            if isinstance(n, ast.Name) and n.id in params
+            and id(n) not in safe_ids
+        }
+
+
+# ---------------------------------------------------------------------------
+# jit-donate-pool — seating cells must donate the pool
+# ---------------------------------------------------------------------------
+
+_POOL_FUNCS = {"scatter_slots", "scatter_pages"}
+
+
+class JitDonatePoolRule:
+    rule_id = "jit-donate-pool"
+    summary = ("pool-mutating function jitted without donate_argnums "
+               "(doubles pool-cache residency per call)")
+    incident = ("PR 9: seating cells donate the pool cache "
+                "(donate_argnums=0) so paged admission updates in "
+                "place instead of copying the whole pool")
+
+    def check(self, ctx, info):
+        pool_defs = {
+            n.name for n in ast.walk(info.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and (n.args.posonlyargs + n.args.args)
+            and (n.args.posonlyargs + n.args.args)[0].arg == "pool"
+        }
+        findings = []
+        for node in ast.walk(info.tree):
+            if not (isinstance(node, ast.Call)
+                    and dotted(node.func) in ("jax.jit", "jit")
+                    and node.args):
+                continue
+            if any(k.arg == "donate_argnums" for k in node.keywords):
+                continue
+            target = self._pool_target(node.args[0], pool_defs)
+            if target:
+                findings.append(info.finding(
+                    self.rule_id, node,
+                    f"jax.jit({target}) mutates its pool argument but "
+                    f"declares no donate_argnums — the old pool buffer "
+                    f"stays live across the call",
+                ))
+        return findings
+
+    def _pool_target(self, fn, pool_defs):
+        name = terminal_name(fn)
+        if name in _POOL_FUNCS or name in pool_defs:
+            return name
+        if (isinstance(fn, ast.Call)
+                and dotted(fn.func) in ("functools.partial", "partial")
+                and fn.args):
+            return self._pool_target(fn.args[0], pool_defs)
+        if isinstance(fn, ast.Lambda):
+            a = fn.args
+            if (a.posonlyargs + a.args) and (
+                    a.posonlyargs + a.args)[0].arg == "pool":
+                return "<lambda pool=...>"
+        return None
+
+
+# ---------------------------------------------------------------------------
+# driver-thread-affinity — the frontend single-driver-thread invariant
+# ---------------------------------------------------------------------------
+
+
+class DriverThreadAffinityRule:
+    rule_id = "driver-thread-affinity"
+    summary = ("@driver_thread_only method called from code inside an "
+               "async def (event-loop thread)")
+    incident = ("PR 8: the frontend's engines are single-threaded by "
+                "contract — exactly one driver thread may touch "
+                "Engine/MicroBatchScheduler state; async handlers must "
+                "go through the inbox")
+
+    def prepare(self, ctx):
+        for info in ctx.files:
+            for node in ast.walk(info.tree):
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    for dec in node.decorator_list:
+                        d = dec.func if isinstance(dec, ast.Call) else dec
+                        if terminal_name(d) == "driver_thread_only":
+                            ctx.driver_methods.add(node.name)
+
+    def check(self, ctx, info):
+        if not ctx.driver_methods:
+            return []
+        findings = []
+        for node in ast.walk(info.tree):
+            if not isinstance(node, ast.AsyncFunctionDef):
+                continue
+            containers = self._container_locals(node)
+            for sub in ast.walk(node):
+                if (isinstance(sub, ast.Call)
+                        and isinstance(sub.func, ast.Attribute)
+                        and sub.func.attr in ctx.driver_methods
+                        and self._receiver_base(sub.func)
+                        not in containers):
+                    findings.append(info.finding(
+                        self.rule_id, sub,
+                        f"`.{sub.func.attr}(...)` is "
+                        f"@driver_thread_only but is called inside "
+                        f"async `{node.name}` (event-loop thread); "
+                        f"post through the driver inbox instead",
+                    ))
+        return findings
+
+    @staticmethod
+    def _receiver_base(attr):
+        node = attr.value
+        while isinstance(node, ast.Attribute):
+            node = node.value
+        return node.id if isinstance(node, ast.Name) else None
+
+    @staticmethod
+    def _container_locals(fn) -> set:
+        """Locals bound to plain containers (`x = []`, `x = list()`):
+        their `.extend`/`.submit` etc. are builtin methods sharing a
+        marked name, not driver-thread surfaces."""
+        out = set()
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assign):
+                continue
+            v = node.value
+            is_container = isinstance(
+                v, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                    ast.DictComp, ast.SetComp)
+            ) or (
+                isinstance(v, ast.Call)
+                and isinstance(v.func, ast.Name)
+                and v.func.id in ("list", "dict", "set", "deque")
+            )
+            if is_container:
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        out.add(t.id)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# telemetry-eager-format — the disabled-path nanosecond budget
+# ---------------------------------------------------------------------------
+
+_EMIT_ATTRS = {"counter", "gauge", "histogram", "span", "instant"}
+
+
+class TelemetryEagerFormatRule:
+    rule_id = "telemetry-eager-format"
+    summary = ("string formatting evaluated on a telemetry emission "
+               "path even when telemetry is disabled")
+    incident = ("PR 6: disabled emission must cost nanoseconds "
+                "(tests/test_obs.py asserts the stream loop's <3% "
+                "budget); an f-string metric name formats "
+                "unconditionally")
+
+    def check(self, ctx, info):
+        findings = []
+        self._visit(info, info.tree.body, False, findings)
+        return findings
+
+    def _visit(self, info, stmts, guarded, findings):
+        for st in stmts:
+            g = guarded
+            if isinstance(st, ast.If) and self._enabled_guard(st.test):
+                self._scan_expr(info, st.test, guarded, findings)
+                self._visit(info, st.body, True, findings)
+                self._visit(info, st.orelse, guarded, findings)
+                continue
+            for child in ast.iter_child_nodes(st):
+                if isinstance(child, (ast.stmt,)):
+                    continue
+                self._scan_expr(info, child, g, findings)
+            body_fields = [
+                getattr(st, f) for f in ("body", "orelse", "finalbody")
+                if getattr(st, f, None)
+            ]
+            for body in body_fields:
+                self._visit(info, body, g, findings)
+            for h in getattr(st, "handlers", []) or []:
+                self._visit(info, h.body, g, findings)
+
+    @staticmethod
+    def _enabled_guard(test) -> bool:
+        for node in ast.walk(test):
+            if isinstance(node, ast.Attribute) and node.attr == "enabled":
+                return True
+            if isinstance(node, ast.Name) and node.id == "enabled":
+                return True
+        return False
+
+    def _scan_expr(self, info, expr, guarded, findings):
+        if guarded or expr is None:
+            return
+        for node in ast.walk(expr):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _EMIT_ATTRS):
+                continue
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                if self._formats(arg):
+                    findings.append(info.finding(
+                        self.rule_id, node,
+                        f"`.{node.func.attr}(...)` argument does "
+                        f"string formatting unconditionally; guard "
+                        f"with `if tel.enabled:` or precompute the "
+                        f"name",
+                    ))
+                    break
+
+    @staticmethod
+    def _formats(arg) -> bool:
+        if isinstance(arg, ast.JoinedStr) and any(
+                isinstance(v, ast.FormattedValue) for v in arg.values):
+            return True
+        if isinstance(arg, ast.BinOp) and isinstance(
+                arg.op, (ast.Mod, ast.Add)):
+            return any(
+                isinstance(s, ast.Constant) and isinstance(s.value, str)
+                for s in (arg.left, arg.right)
+            )
+        if (isinstance(arg, ast.Call)
+                and isinstance(arg.func, ast.Attribute)
+                and arg.func.attr == "format"):
+            return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# numpy-in-jit — host numpy inside a traced function
+# ---------------------------------------------------------------------------
+
+
+class NumpyInJitRule:
+    rule_id = "numpy-in-jit"
+    summary = ("host numpy call inside a jitted function (constant-"
+               "folds a traced value or forces a host sync)")
+    incident = ("PR 2: stream classify cells are pure jnp so the "
+                "bucket cells stay device-resident; np.* inside jit "
+                "either crashes on tracers or silently freezes values")
+
+    def check(self, ctx, info):
+        findings = []
+        for node in ast.walk(info.tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            if not _jit_decorated(node):
+                continue
+            for sub in ast.walk(node):
+                if (isinstance(sub, ast.Call)
+                        and dotted(sub.func).split(".")[0]
+                        in ("np", "numpy")):
+                    findings.append(info.finding(
+                        self.rule_id, sub,
+                        f"`{ast.unparse(sub.func)}(...)` inside jitted "
+                        f"`{node.name}`; use jnp (host numpy can't see "
+                        f"tracers)",
+                    ))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# mutable-default
+# ---------------------------------------------------------------------------
+
+
+class MutableDefaultRule:
+    rule_id = "mutable-default"
+    summary = "mutable default argument shared across calls"
+    incident = ("PR 7: lineage tags accumulate per call — a shared "
+                "default dict would bleed tags across requests")
+
+    def check(self, ctx, info):
+        findings = []
+        for node in ast.walk(info.tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            for default in list(node.args.defaults) + [
+                    d for d in node.args.kw_defaults if d is not None]:
+                mutable = isinstance(
+                    default, (ast.List, ast.Dict, ast.Set)
+                ) or (
+                    isinstance(default, ast.Call)
+                    and isinstance(default.func, ast.Name)
+                    and default.func.id in ("list", "dict", "set")
+                )
+                if mutable:
+                    findings.append(info.finding(
+                        self.rule_id, default,
+                        f"mutable default in `{node.name}(...)` is "
+                        f"shared across calls; default to None and "
+                        f"allocate inside",
+                    ))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# broad-except-pass
+# ---------------------------------------------------------------------------
+
+
+class BroadExceptPassRule:
+    rule_id = "broad-except-pass"
+    summary = "bare/broad except that swallows the error with pass"
+    incident = ("PR 8: serve/stream errors must surface as typed "
+                "rejections or driver-thread faults; a swallowed "
+                "exception is a silent SLO breach")
+
+    def check(self, ctx, info):
+        findings = []
+        for node in ast.walk(info.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            broad = node.type is None or dotted(node.type) in (
+                "Exception", "BaseException",
+            )
+            silent = all(
+                isinstance(st, ast.Pass)
+                or (isinstance(st, ast.Expr)
+                    and isinstance(st.value, ast.Constant))
+                for st in node.body
+            )
+            if broad and silent:
+                findings.append(info.finding(
+                    self.rule_id, node,
+                    "broad except swallows the error; at minimum "
+                    "count it on a telemetry counter or narrow the "
+                    "type",
+                ))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# wallclock-in-measurement
+# ---------------------------------------------------------------------------
+
+
+class WallclockRule:
+    rule_id = "wallclock-ban"
+    summary = ("time.time() in library code (NTP-steppable; use "
+               "perf_counter/monotonic, or pragma for metadata)")
+    incident = ("PR 7: latency accounting is perf_counter end to end "
+                "so coordinated-omission math can't be skewed by "
+                "clock steps")
+
+    def check(self, ctx, info):
+        findings = []
+        for node in ast.walk(info.tree):
+            if (isinstance(node, ast.Call)
+                    and dotted(node.func) == "time.time"):
+                findings.append(info.finding(
+                    self.rule_id, node,
+                    "time.time() is wall clock; measurement code must "
+                    "use time.perf_counter()/monotonic() (metadata "
+                    "timestamps: suppress with a pragma)",
+                ))
+        return findings
+
+
+RULES = (
+    NpIndexDtypeRule(),
+    PrngKeyReuseRule(),
+    TracedPythonBranchRule(),
+    JitDonatePoolRule(),
+    DriverThreadAffinityRule(),
+    TelemetryEagerFormatRule(),
+    NumpyInJitRule(),
+    MutableDefaultRule(),
+    BroadExceptPassRule(),
+    WallclockRule(),
+)

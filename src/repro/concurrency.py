@@ -1,0 +1,23 @@
+"""Thread-affinity markers.
+
+`Engine` / `MicroBatchScheduler` are single-threaded by contract:
+under the serving frontend, exactly one driver thread may touch them,
+and async (event-loop) code must go through the frontend's inbox
+instead. That convention was previously enforced only by comment;
+`@driver_thread_only` makes it machine-checkable — the
+`driver-thread-affinity` rule in `repro.analysis` flags any call to a
+marked method from inside an `async def`.
+
+The decorator is a pure marker (returns `fn` unchanged, zero runtime
+cost on the hot tick/submit path); the contract is enforced
+statically, not dynamically.
+"""
+
+from __future__ import annotations
+
+
+def driver_thread_only(fn):
+    """Mark `fn` as callable only from the owning driver thread (or
+    whatever single thread owns the object outside a frontend)."""
+    fn.__driver_thread_only__ = True
+    return fn

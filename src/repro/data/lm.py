@@ -22,13 +22,14 @@ def synth_tokens(
 ) -> jax.Array:
     """Structured token stream: a random walk over a banded vocabulary
     with periodic resets — has learnable local statistics (bigram-ish)."""
-    k1, k2, k3 = jax.random.split(key, 3)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
     steps = jax.random.randint(k1, (batch, seq_len), -8, 9)
     start = jax.random.randint(k2, (batch, 1), 0, vocab)
     walk = (start + jnp.cumsum(steps, axis=1)) % vocab
-    # sprinkle 5% uniform-random tokens (noise floor for the loss)
+    # sprinkle 5% uniform-random tokens (noise floor for the loss);
+    # mask and values take distinct keys so they stay uncorrelated
     noise = jax.random.randint(k3, (batch, seq_len), 0, vocab)
-    is_noise = jax.random.bernoulli(k3, 0.05, (batch, seq_len))
+    is_noise = jax.random.bernoulli(k4, 0.05, (batch, seq_len))
     return jnp.where(is_noise, noise, walk).astype(jnp.int32)
 
 

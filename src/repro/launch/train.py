@@ -146,7 +146,7 @@ def train_lm(args) -> dict:
             model.loss, opt, clip_norm=1.0, n_micro=args.grad_accum
         ),
         donate_argnums=(0,),
-    ))
+    ), donate=(0,))
 
     stream = lm.TokenStream(
         batch=args.batch, seq_len=args.seq, vocab=cfg.vocab, seed=args.seed
@@ -181,7 +181,7 @@ def train_va(args) -> dict:
             lambda p, b: vadetect.loss_fn(p, b, cfg), opt, clip_norm=1.0
         ),
         donate_argnums=(0,),
-    ))
+    ), donate=(0,))
     stream = iegm.IEGMStream(batch=args.batch, seed=args.seed)
     state, history = fault.run_training(
         step_fn, state, stream.batch_at,

@@ -24,10 +24,12 @@ Three concerns the generic registry/tracer can't see:
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable, Optional
 
 import jax
+import numpy as np
 
 from repro._compat import cost_analysis_dict
 
@@ -41,6 +43,69 @@ def jit_cache_size(fn) -> Optional[int]:
         return None
 
 
+@dataclasses.dataclass
+class CellInfo:
+    """Audit metadata for one tracked jit cell.
+
+    `budget` is the cell's declared collective comm budget: HLO
+    collective op name -> max occurrences in the optimized module
+    (`None` means "undeclared" and the auditor treats it as the empty
+    budget — no collectives allowed — so single-device cells need no
+    declaration and sharded cells must state theirs). `donate` mirrors
+    the jit's `donate_argnums`; the auditor uses it to assert no
+    donation was silently dropped. `sharded_outputs` declares that at
+    least one output must land sharded (not fully replicated).
+    `call_avals` is the (args, kwargs) aval pytree captured from the
+    cell's first real call — what the auditor re-lowers with."""
+
+    name: str
+    fn: Callable
+    budget: Optional[dict] = None
+    donate: tuple = ()
+    sharded_outputs: bool = False
+    call_avals: Optional[tuple] = None
+
+
+def _aval_of(x):
+    """Abstract one call-argument leaf: arrays become
+    `ShapeDtypeStruct` (keeping a `NamedSharding` so sharded cells
+    re-lower on their mesh; single-device placements stay abstract),
+    everything else passes through verbatim so weak-typed Python
+    scalars retrace exactly as the real call did. Never holds a buffer
+    reference — safe to capture args that are about to be donated."""
+    if isinstance(x, jax.Array):
+        sh = x.sharding
+        if isinstance(sh, jax.sharding.NamedSharding):
+            return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=sh)
+        return jax.ShapeDtypeStruct(x.shape, x.dtype)
+    if isinstance(x, np.ndarray):
+        return jax.ShapeDtypeStruct(x.shape, x.dtype)
+    return x
+
+
+class TrackedCell:
+    """Transparent wrapper an enabled probe returns from `track`:
+    records the argument avals of the first call into the cell's
+    `CellInfo` (one tree_map, then a plain delegate — far inside the
+    disabled-telemetry overhead budget), and forwards attribute access
+    to the underlying jit wrapper so `.lower`/`._cache_size` callers
+    are unaffected."""
+
+    def __init__(self, info: CellInfo):
+        self._info = info
+        self._fn = info.fn
+
+    def __call__(self, *args, **kwargs):
+        if self._info.call_avals is None:
+            self._info.call_avals = jax.tree.map(
+                _aval_of, (args, kwargs)
+            )
+        return self._fn(*args, **kwargs)
+
+    def __getattr__(self, name):
+        return getattr(self._fn, name)
+
+
 class JitProbe:
     """Named registry of jitted cells for recompile accounting.
 
@@ -50,22 +115,35 @@ class JitProbe:
 
     def __init__(self, enabled: bool = True):
         self.enabled = enabled
-        self._cells: dict[str, Callable] = {}
+        self._cells: dict[str, CellInfo] = {}
 
-    def track(self, name: str, fn):
+    def track(self, name: str, fn, *, budget: Optional[dict] = None,
+              donate: tuple = (), sharded_outputs: bool = False):
         """Register `fn` under `name` (idempotent; later registrations
-        under the same name win — e.g. a rebuilt engine). Returns `fn`
-        so call sites can wrap in place."""
-        if self.enabled:
-            self._cells[name] = fn
-        return fn
+        under the same name win — e.g. a rebuilt engine). Returns a
+        call-through `TrackedCell` when enabled (disabled probes return
+        `fn` unchanged) so call sites can wrap in place. Keyword
+        metadata feeds the `repro.analysis` cell auditor."""
+        if not self.enabled:
+            return fn
+        info = CellInfo(
+            name=name, fn=fn, budget=budget, donate=tuple(donate),
+            sharded_outputs=sharded_outputs,
+        )
+        self._cells[name] = info
+        return TrackedCell(info)
+
+    def cells(self) -> dict:
+        """name -> `CellInfo` for every tracked cell (the
+        `repro.analysis.cellaudit` walk surface)."""
+        return dict(sorted(self._cells.items()))
 
     def cache_sizes(self) -> dict:
         """name -> compiled-variant count for every tracked cell (the
         BENCH `telemetry.recompiles` section)."""
         return {
-            name: jit_cache_size(fn)
-            for name, fn in sorted(self._cells.items())
+            name: jit_cache_size(info.fn)
+            for name, info in sorted(self._cells.items())
         }
 
     def snapshot(self) -> dict:
@@ -87,8 +165,11 @@ class _NullProbe:
     __slots__ = ()
     enabled = False
 
-    def track(self, name, fn):
+    def track(self, name, fn, **meta):
         return fn
+
+    def cells(self):
+        return {}
 
     def cache_sizes(self):
         return {}

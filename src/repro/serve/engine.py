@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.concurrency import driver_thread_only
+
 from repro import obs
 from repro.dist import sharding as shd
 from repro.models.api import Model
@@ -373,7 +375,8 @@ class Engine:
                 else seating.scatter_slots
             )
             self._seat_jit = probe.track(
-                "serve.seat", jax.jit(seat_fn, donate_argnums=0)
+                "serve.seat", jax.jit(seat_fn, donate_argnums=0),
+                donate=(0,),
             )
         return self._prefill_jit, self._seat_jit, lambda p: p
 
@@ -395,6 +398,7 @@ class Engine:
 
     # -- queue / admission --------------------------------------------------
 
+    @driver_thread_only
     def submit(self, req: Request) -> None:
         if req.prompt.shape[0] == 0:
             # reject here: an empty prompt has no prefill logits to
@@ -536,8 +540,9 @@ class Engine:
         return {}
 
     def _admit_group_inner(
-        self, tel, s_len: int, pairs: list, tagged: dict = {},
+        self, tel, s_len: int, pairs: list, tagged: Optional[dict] = None,
     ) -> None:
+        tagged = {} if tagged is None else tagged
         reqs = [r for _, r in pairs]
         n = len(reqs)
         rows = self._admission_rows(n)
@@ -831,6 +836,7 @@ class Engine:
         )
         return logits
 
+    @driver_thread_only
     def tick(self) -> int:
         """One decode tick for the whole pool; returns #active slots."""
         tel = obs.get()
@@ -979,6 +985,7 @@ class Engine:
         self._byte_model = (slot_b, page_b)
         return self._byte_model
 
+    @driver_thread_only
     def run(self, max_ticks: int = 10_000) -> None:
         for _ in range(max_ticks):
             if self.tick() == 0 and not self._queue:

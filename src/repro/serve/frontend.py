@@ -418,9 +418,12 @@ class Frontend:
         else:
             self._bump("lm_rejected")
             self._bump(f"lm_rejected_{payload['reason']}")
-        tel.registry.counter(
-            f"frontend.lm_{payload['status']}_total"
-        ).inc()
+        if tel.enabled:
+            # disabled registry drops counts anyway — guarding skips
+            # the f-string format on the disabled path
+            tel.registry.counter(
+                f"frontend.lm_{payload['status']}_total"
+            ).inc()
         reply({"type": "lm_result", "uid": uid, **payload})
 
     def _handle_lm(self, msg, reply, transport) -> None:
@@ -546,9 +549,11 @@ class Frontend:
                 "frontend/ack", cat="frontend", request_id=rid,
                 status=ack["status"],
             )
-        tel.registry.counter(
-            f"frontend.seg_{ack['status']}_total"
-        ).inc()
+        if tel.enabled:
+            # as above: skip the f-string on the disabled path
+            tel.registry.counter(
+                f"frontend.seg_{ack['status']}_total"
+            ).inc()
         reply(ack)
 
     def _handle_drain(self, reply) -> None:
@@ -727,8 +732,10 @@ class Frontend:
                 )
                 tel.block(urgent)
         # vote-driven urgency never un-marks a client-pinned patient
+        # (dtype pinned: an empty vote result must stay a bool mask,
+        # never decay to float64 — the mark_urgent([]) class)
         self._sched.set_urgent(
-            np.asarray(urgent) | self._client_urgent
+            np.asarray(urgent, bool) | self._client_urgent
         )
 
 

@@ -67,6 +67,28 @@ from repro.serve.engine import (
 from repro.serve.paging import PagingConfig, validate_page_size
 
 
+def _decode_comm_budget(model: Model) -> dict:
+    """Declared collective budget for this model's serve cells (the
+    `repro.analysis` cell audit asserts the compiled inventory stays
+    under it). Row/column-parallel TP contractions legitimately psum or
+    gather a handful of partials per layer, and the scanned layer stack
+    multiplies the loop body by its trip count — so the envelope scales
+    with `n_layers`. What it catches is the SPMD blowup class: an
+    accidental per-step resharding explodes the count far past
+    O(layers)."""
+    n = int(model.cfg.n_layers)
+    per_layer_cap = 6 * n + 16
+    return {
+        "all-reduce": per_layer_cap,
+        "all-gather": per_layer_cap,
+        "reduce-scatter": per_layer_cap,
+        "collective-permute": per_layer_cap,
+        # XLA lowers some 2D-mesh reshards of the prefill activations
+        # to all-to-all (measured: 2 on a 4x2 mesh at n_layers=2)
+        "all-to-all": per_layer_cap,
+    }
+
+
 @dataclasses.dataclass(frozen=True)
 class DecodePlan:
     """Placement plan for one (model, mesh, pool size): every sharding
@@ -341,6 +363,8 @@ class ShardedEngine(Engine):
                     ),
                     out_shardings=(plan.logits, plan.cache),
                 ),
+                budget=_decode_comm_budget(self.model),
+                sharded_outputs=True,
             )
 
             def pstep(params, cache, tok, pos):
@@ -353,7 +377,11 @@ class ShardedEngine(Engine):
 
             return pstep
         _, decode = compile_decode(self.model, plan)
-        decode = obs.get().probe.track("serve.decode_step", decode)
+        decode = obs.get().probe.track(
+            "serve.decode_step", decode,
+            budget=_decode_comm_budget(self.model),
+            sharded_outputs=True,
+        )
 
         def step(params, cache, tok, pos):
             return decode(
@@ -392,6 +420,8 @@ class ShardedEngine(Engine):
                     in_shardings=(self.plan.params, rplan.prompts),
                     out_shardings=(rplan.logits, rplan.cache),
                 ),
+                budget=_decode_comm_budget(self.model),
+                sharded_outputs=True,
             )
             if self._pg is not None:
                 # admission rows stay a dense cache (what prefill
@@ -410,6 +440,7 @@ class ShardedEngine(Engine):
                         out_shardings=self.plan.cache,
                         donate_argnums=0,
                     ),
+                    donate=(0,), sharded_outputs=True,
                 )
             else:
                 seat = probe.track(
@@ -422,6 +453,7 @@ class ShardedEngine(Engine):
                         out_shardings=self.plan.cache,
                         donate_argnums=0,
                     ),
+                    donate=(0,), sharded_outputs=True,
                 )
             place = lambda p: jax.device_put(
                 jnp.asarray(p, jnp.int32), rplan.prompts
@@ -451,6 +483,8 @@ class ShardedEngine(Engine):
                     ),
                     out_shardings=(rplan.logits, rplan.cache),
                 ),
+                budget=_decode_comm_budget(self.model),
+                sharded_outputs=True,
             )
             init_rows = lambda: jax.device_put(
                 self.model.init_cache(rows), rplan.cache

@@ -163,10 +163,14 @@ def simulate(
     metrics = FleetMetrics()
     bank = _SignalBank(source, refs) if cfg.pregen else None
 
+    # the vote cell is probe-tracked like the classify cells, so the
+    # repro.analysis cell audit covers it from the same registry
+    vote_update = obs.get().probe.track("stream.vote", V.update)
+
     # warmup: compile every bucket shape outside the timed region
     for b in cfg.buckets:
         runner.classify(jnp.zeros((b, vadetect.RECORD_LEN))).block_until_ready()
-        V.update(
+        vote_update(
             vstate,
             jnp.zeros((b,), jnp.int32),
             jnp.zeros((b,), jnp.int32),
@@ -250,7 +254,7 @@ def simulate(
                 # only when telemetry is on and blow the <3% enabled
                 # budget. Wall dur is dispatch-only; the virtual track
                 # (v_ts_s/v_dur_s on the flush span) carries timing.
-                vstate, emit, diag, urgent = V.update(
+                vstate, emit, diag, urgent = vote_update(
                     vstate,
                     jnp.asarray(batch.patients),
                     preds,
@@ -260,7 +264,7 @@ def simulate(
         sched.set_urgent(
             pinned_urgent
             if pinned_urgent is not None
-            else np.asarray(urgent)
+            else np.asarray(urgent, bool)
         )
 
         service = runner.batch_service_s(batch.bucket)
@@ -300,9 +304,11 @@ def simulate(
                         completion - batch.formed_at_s)
             )
             lat_records["patient"].append(batch.patients[valid])
-        emit_np = np.asarray(emit)
+        # masks/indices pinned: empty device results must never decay
+        # to float64 (the mark_urgent([]) class)
+        emit_np = np.asarray(emit, bool)
         if emit_np.any():
-            diag_np = np.asarray(diag)
+            diag_np = np.asarray(diag, np.int64)
             who = np.nonzero(emit_np)[0]
             metrics.observe_diagnoses(
                 len(who), int(diag_np[who].sum())

@@ -33,6 +33,7 @@ import itertools
 import numpy as np
 
 from repro import obs
+from repro.concurrency import driver_thread_only
 from repro.stream.sources import SEGMENT_PERIOD_S, SegmentRef
 from repro.stream.vote import VOTE_SEGMENTS
 
@@ -104,6 +105,7 @@ class MicroBatchScheduler:
 
     # -- admission ----------------------------------------------------------
 
+    @driver_thread_only
     def enqueue(self, ref: SegmentRef) -> None:
         if not self._queue:
             self._oldest_cache = ref.arrival_s
@@ -124,18 +126,21 @@ class MicroBatchScheduler:
                 v_ts_s=ref.arrival_s,
             )
 
+    @driver_thread_only
     def extend(self, refs) -> None:
         for r in refs:
             self.enqueue(r)
 
     # -- urgency feedback (from stream.vote) --------------------------------
 
+    @driver_thread_only
     def set_urgent(self, urgent: np.ndarray) -> None:
         """Overwrite the urgency bitmap (one bool per patient)."""
         urgent = np.asarray(urgent, bool)
         assert urgent.shape == (self.n_patients,), urgent.shape
         self._urgent = urgent.copy()
 
+    @driver_thread_only
     def mark_urgent(self, patients, flag: bool = True) -> None:
         # force an integer index dtype: `np.asarray([])` defaults to
         # float64, and float-array indexing raises even for zero
@@ -196,6 +201,7 @@ class MicroBatchScheduler:
                 return b
         return self.cfg.buckets[-1]
 
+    @driver_thread_only
     def next_batch(self, now_s: float) -> PackedBatch | None:
         """Pack up to largest-bucket segments: urgent first, then
         routine, each class in (deadline, admission) order; pad the
@@ -278,8 +284,8 @@ class MicroBatchScheduler:
         return PackedBatch(
             patients=np.array([r.patient for r in rows], np.int32),
             seqs=np.array([r.seq for r in rows], np.int32),
-            arrivals=np.array([r.arrival_s for r in rows]),
-            deadlines=np.array([r.deadline_s for r in rows]),
+            arrivals=np.array([r.arrival_s for r in rows], np.float64),
+            deadlines=np.array([r.deadline_s for r in rows], np.float64),
             priorities=prio,
             valid=np.arange(bucket) < n,
             bucket=bucket,

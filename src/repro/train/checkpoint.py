@@ -64,6 +64,7 @@ def save(state: Any, ckpt_dir: str, step: int, *, keep: int = 3) -> str:
     flat = _flatten(state)
     np.savez(os.path.join(tmp, "arrays.npz"), **flat)
     with open(os.path.join(tmp, "meta.json"), "w") as f:
+        # repro: allow[wallclock-ban] wall-clock save time is metadata
         json.dump({"step": int(step), "time": time.time(),
                    "n_leaves": len(flat)}, f)
     if os.path.exists(final):

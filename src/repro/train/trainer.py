@@ -39,6 +39,23 @@ from repro.dist.accumulate import accumulate_grads
 from repro.optim import clip_by_global_norm
 from repro.optim.optimizers import Optimizer, apply_updates
 
+# Declared collective envelope for the train-step cells, asserted by
+# the `repro.analysis` cell audit. Data-parallel grad psums, FSDP
+# gather/scatter pairs, the compressed cross-pod exchange (all-to-all /
+# permute chains, scheme-dependent) and the global-norm reduction all
+# land within a few hundred collectives per compiled step on the pod
+# meshes the dist benchmark runs; the audit's job is to catch the
+# orders-of-magnitude SPMD blowup class (a per-parameter resharding
+# emitting thousands), not to pin exact per-scheme counts — those live
+# in tests/test_hlo_count.py.
+_TRAIN_COMM_ENVELOPE = {
+    "all-reduce": 512,
+    "all-gather": 512,
+    "reduce-scatter": 512,
+    "collective-permute": 512,
+    "all-to-all": 512,
+}
+
 
 def init_state(params: Any, optimizer: Optimizer) -> dict:
     return {
@@ -130,6 +147,9 @@ def make_sharded_train_step(
             out_shardings=(s_shard, None),
             donate_argnums=(0,) if donate else (),
         ),
+        budget=_TRAIN_COMM_ENVELOPE,
+        donate=(0,) if donate else (),
+        sharded_outputs=True,
     )
     return jitted, s_shard, b_shard
 
@@ -400,6 +420,9 @@ def make_multipod_train_step(
             out_shardings=(shd.named(mean_spec, mesh), err_shard),
             donate_argnums=(1,) if donate else (),
         ),
+        budget=_TRAIN_COMM_ENVELOPE,
+        donate=(1,) if donate else (),
+        sharded_outputs=True,
     )
 
     # ---- stage C: optimizer update (pjit, ZeRO-1 shardings) ----
@@ -427,6 +450,9 @@ def make_multipod_train_step(
             out_shardings=(core_shard, None),
             donate_argnums=(0,) if donate else (),
         ),
+        budget=_TRAIN_COMM_ENVELOPE,
+        donate=(0,) if donate else (),
+        sharded_outputs=True,
     )
 
     step_a = None  # compiled lazily: in_shardings depend on batch shapes
@@ -451,6 +477,8 @@ def make_multipod_train_step(
                     in_shardings=(p_shard, pod_batch_shard(pb)),
                     out_shardings=(g_shard, None),
                 ),
+                budget=_TRAIN_COMM_ENVELOPE,
+                sharded_outputs=True,
             )
         with tel.span("train/grads", cat="train"):
             grads, metrics = tel.block(step_a(state["params"], pb))

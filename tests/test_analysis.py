@@ -1,0 +1,574 @@
+"""Golden tests for the repro.analysis rule pack + scan machinery.
+
+Each rule gets a bad/good twin: a minimal snippet that must fire the
+rule (with the exact count and line), and a corrected twin that must
+scan clean — so a rule that silently stops firing (or starts
+over-firing) fails here, not in review. On top of the goldens:
+
+  * repo-is-clean — `src/` (plus scripts/benchmarks/examples) under the
+    committed baseline produces zero live findings, the regression CI
+    gates on;
+  * suppression — pragma on-line and line-above, wrong-rule pragma
+    ignored, baseline match, stale-baseline detection;
+  * the cell auditor's pure-text HLO checks and its end-to-end verdicts
+    on tiny known-good / known-bad jit cells.
+"""
+
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import astpass, cellaudit, hloscan
+from repro.analysis.rules import RULES
+
+REPO = Path(__file__).resolve().parent.parent
+
+RULE_IDS = {r.rule_id for r in RULES}
+
+
+def scan_src(tmp_path, src, rules=RULES, baseline=None):
+    p = tmp_path / "snippet.py"
+    p.write_text(src)
+    return astpass.scan_paths([p], rules, baseline=baseline,
+                              root=tmp_path)
+
+
+def findings_for(tmp_path, src, rule_id):
+    res = scan_src(tmp_path, src)
+    assert not res.stale_baseline
+    return [f for f in res.findings if f.rule == rule_id]
+
+
+# ---------------------------------------------------------------------------
+# golden bad/good twins, one pair per rule
+# ---------------------------------------------------------------------------
+
+GOLDENS = {
+    # (bad source, expected firing count), good twin
+    "np-index-dtype": (
+        """\
+import numpy as np
+
+def flush(urgent, mask, vals):
+    u = np.asarray(urgent)
+    mask = mask | u
+    idx = np.array(vals)
+    return mask[idx], np.nonzero(np.asarray(urgent))
+""",
+        3,
+        """\
+import numpy as np
+
+def flush(urgent, mask, vals):
+    u = np.asarray(urgent, bool)
+    mask = mask | u
+    idx = np.array(vals, np.intp)
+    return mask[idx], np.nonzero(np.asarray(urgent, bool))
+""",
+    ),
+    "prng-key-reuse": (
+        """\
+import jax
+
+def sample(key, n):
+    noise = jax.random.normal(key, (n,))
+    mask = jax.random.bernoulli(key, 0.05, (n,))
+    return noise, mask
+""",
+        1,
+        """\
+import jax
+
+def sample(key, n):
+    k1, k2 = jax.random.split(key)
+    noise = jax.random.normal(k1, (n,))
+    mask = jax.random.bernoulli(k2, 0.05, (n,))
+    return noise, mask
+""",
+    ),
+    "traced-python-branch": (
+        """\
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def step(x, n):
+    if n > 3:
+        return x * 2
+    return x
+""",
+        1,
+        """\
+import functools
+
+import jax
+import jax.numpy as jnp
+
+@functools.partial(jax.jit, static_argnames="n")
+def step(x, n):
+    if n > 3:
+        return x * 2
+    if x.ndim > 1:
+        return x.sum(0)
+    return jnp.where(x > 0, x, -x)
+""",
+    ),
+    "jit-donate-pool": (
+        """\
+import jax
+
+def scatter_slots(pool, rows, idx):
+    return pool.at[idx].set(rows)
+
+seat = jax.jit(scatter_slots)
+""",
+        1,
+        """\
+import jax
+
+def scatter_slots(pool, rows, idx):
+    return pool.at[idx].set(rows)
+
+seat = jax.jit(scatter_slots, donate_argnums=0)
+""",
+    ),
+    "driver-thread-affinity": (
+        """\
+from repro.concurrency import driver_thread_only
+
+class Engine:
+    @driver_thread_only
+    def submit(self, req):
+        pass
+
+async def handler(eng, req):
+    eng.submit(req)
+""",
+        1,
+        """\
+from repro.concurrency import driver_thread_only
+
+class Engine:
+    @driver_thread_only
+    def submit(self, req):
+        pass
+
+def drive(eng, req):
+    eng.submit(req)
+
+async def handler(inbox, req):
+    inbox.put(req)
+    batch = []
+    batch.extend([req])
+""",
+    ),
+    "telemetry-eager-format": (
+        """\
+def emit(tel, name, status):
+    tel.registry.counter(f"frontend.{name}_{status}_total").inc()
+""",
+        1,
+        """\
+def emit(tel, name, status):
+    if tel.enabled:
+        tel.registry.counter(f"frontend.{name}_{status}_total").inc()
+""",
+    ),
+    "numpy-in-jit": (
+        """\
+import jax
+import numpy as np
+
+@jax.jit
+def classify(x):
+    return np.argmax(x, axis=-1)
+""",
+        1,
+        """\
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def classify(x):
+    return jnp.argmax(x, axis=-1)
+""",
+    ),
+    "mutable-default": (
+        """\
+def admit(pairs, tagged={}):
+    tagged["n"] = len(pairs)
+    return tagged
+""",
+        1,
+        """\
+def admit(pairs, tagged=None):
+    tagged = {} if tagged is None else tagged
+    tagged["n"] = len(pairs)
+    return tagged
+""",
+    ),
+    "broad-except-pass": (
+        """\
+def drain(q):
+    try:
+        q.get_nowait()
+    except Exception:
+        pass
+""",
+        1,
+        """\
+import queue
+
+def drain(q):
+    try:
+        q.get_nowait()
+    except queue.Empty:
+        return None
+""",
+    ),
+    "wallclock-ban": (
+        """\
+import time
+
+def measure(fn):
+    t0 = time.time()
+    fn()
+    return time.time() - t0
+""",
+        2,
+        """\
+import time
+
+def measure(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+""",
+    ),
+}
+
+
+def test_every_rule_has_a_golden():
+    assert set(GOLDENS) == RULE_IDS
+
+
+@pytest.mark.parametrize("rule_id", sorted(GOLDENS))
+def test_golden_bad_fires(rule_id, tmp_path):
+    bad, n_expected, _good = GOLDENS[rule_id]
+    hits = findings_for(tmp_path, bad, rule_id)
+    assert len(hits) == n_expected, [f.to_dict() for f in hits]
+    for f in hits:
+        assert f.path == "snippet.py"
+        assert f.line >= 1 and f.message and f.snippet
+
+
+@pytest.mark.parametrize("rule_id", sorted(GOLDENS))
+def test_golden_good_twin_clean(rule_id, tmp_path):
+    _bad, _n, good = GOLDENS[rule_id]
+    res = scan_src(tmp_path, good)
+    assert res.findings == [], [f.to_dict() for f in res.findings]
+
+
+# ---------------------------------------------------------------------------
+# calibration edges that bit during rollout (regression-pinned)
+# ---------------------------------------------------------------------------
+
+
+def test_prng_mutually_exclusive_branches_ok(tmp_path):
+    src = """\
+import jax
+
+def pick(key, mode, n):
+    if mode == "a":
+        return jax.random.normal(key, (n,))
+    return jax.random.bernoulli(key, 0.5, (n,))
+"""
+    assert findings_for(tmp_path, src, "prng-key-reuse") == []
+
+
+def test_prng_reassigned_key_ok(tmp_path):
+    src = """\
+import jax
+
+def walk(key, n):
+    x = jax.random.normal(key, (n,))
+    key = jax.random.fold_in(key, 1)
+    y = jax.random.normal(key, (n,))
+    return x + y
+"""
+    assert findings_for(tmp_path, src, "prng-key-reuse") == []
+
+
+def test_affinity_container_local_ok(tmp_path):
+    src = """\
+from repro.concurrency import driver_thread_only
+
+class Sched:
+    @driver_thread_only
+    def extend(self, rows):
+        pass
+
+async def collect(evs):
+    out = []
+    out.extend(evs)
+    return out
+"""
+    assert findings_for(tmp_path, src, "driver-thread-affinity") == []
+
+
+def test_traced_branch_safe_shape_checks_ok(tmp_path):
+    src = """\
+import jax
+
+@jax.jit
+def f(x, y):
+    if x.shape[0] > 2 and y is None:
+        return x
+    if len(x.shape) > 1:
+        return x.sum()
+    return x * 2
+"""
+    assert findings_for(tmp_path, src, "traced-python-branch") == []
+
+
+# ---------------------------------------------------------------------------
+# suppression: pragma + baseline + staleness
+# ---------------------------------------------------------------------------
+
+_WALL = """\
+import time
+
+def stamp():
+    return time.time()
+"""
+
+
+def test_pragma_on_line_suppresses(tmp_path):
+    src = _WALL.replace(
+        "return time.time()",
+        "return time.time()  # repro: allow[wallclock-ban] metadata",
+    )
+    res = scan_src(tmp_path, src)
+    assert res.findings == []
+    assert [f.suppressed_by for f in res.suppressed] == ["pragma"]
+
+
+def test_pragma_line_above_suppresses(tmp_path):
+    src = _WALL.replace(
+        "    return time.time()",
+        "    # repro: allow[wallclock-ban] metadata\n"
+        "    return time.time()",
+    )
+    res = scan_src(tmp_path, src)
+    assert res.findings == []
+    assert [f.suppressed_by for f in res.suppressed] == ["pragma"]
+
+
+def test_pragma_wrong_rule_does_not_suppress(tmp_path):
+    src = _WALL.replace(
+        "return time.time()",
+        "return time.time()  # repro: allow[mutable-default] nope",
+    )
+    res = scan_src(tmp_path, src)
+    assert [f.rule for f in res.findings] == ["wallclock-ban"]
+
+
+def test_baseline_suppresses_and_matches(tmp_path):
+    baseline = [{
+        "rule": "wallclock-ban", "path": "snippet.py",
+        "snippet": "return time.time()",
+    }]
+    res = scan_src(tmp_path, _WALL, baseline=baseline)
+    assert res.findings == []
+    assert [f.suppressed_by for f in res.suppressed] == ["baseline"]
+    assert res.stale_baseline == []
+
+
+def test_stale_baseline_detected(tmp_path):
+    baseline = [{
+        "rule": "wallclock-ban", "path": "snippet.py",
+        "snippet": "return time.time()  # long gone",
+    }]
+    res = scan_src(tmp_path, _WALL, baseline=baseline)
+    assert [f.rule for f in res.findings] == ["wallclock-ban"]
+    assert res.stale_baseline == baseline
+
+
+def test_committed_baseline_loads_and_is_fresh():
+    """Every entry in the checked-in baseline must still match a live
+    finding (same check the CLI turns into exit 2)."""
+    path = REPO / "analysis_baseline.json"
+    baseline = astpass.load_baseline(path)
+    assert baseline, "committed baseline exists but is empty"
+    res = astpass.scan_paths([REPO / "src"], RULES, baseline=baseline,
+                             root=REPO)
+    assert res.stale_baseline == [], res.stale_baseline
+
+
+# ---------------------------------------------------------------------------
+# the repo itself is clean — the regression CI gates on
+# ---------------------------------------------------------------------------
+
+
+def test_repo_scans_clean():
+    baseline = astpass.load_baseline(REPO / "analysis_baseline.json")
+    paths = [
+        REPO / d for d in ("src", "scripts", "benchmarks", "examples")
+        if (REPO / d).exists()
+    ]
+    res = astpass.scan_paths(paths, RULES, baseline=baseline, root=REPO)
+    assert res.findings == [], [f.to_dict() for f in res.findings]
+    assert res.files_scanned > 50
+
+
+def test_report_schema_shape(tmp_path):
+    from repro import analysis
+
+    res = scan_src(tmp_path, _WALL)
+    rep = res.to_report(analysis.SCHEMA_VERSION, RULES)
+    assert rep["report"] == "analysis"
+    assert rep["schema_version"] == analysis.SCHEMA_VERSION
+    assert {r["id"] for r in rep["rules"]} == RULE_IDS
+    assert all(r["incident"] for r in rep["rules"])
+    f = rep["findings"][0]
+    assert set(f) == {"rule", "path", "line", "message", "snippet"}
+
+
+# ---------------------------------------------------------------------------
+# hloscan: pure-text HLO checks
+# ---------------------------------------------------------------------------
+
+
+def test_hloscan_f64_and_host_ops():
+    text = (
+        "HloModule m, input_output_alias={ {}: (0, {}, may-alias) }\n"
+        "  %x = f64[4]{0} parameter(0)\n"
+        "  %cc = f32[] custom-call(), custom_call_target=\"xla_python_cpu_callback\"\n"
+        "  %o = f32[] outfeed(%cc)\n"
+    )
+    assert hloscan.f64_lines(text) == [2]
+    ops = [op for _ln, op in hloscan.host_transfer_ops(text)]
+    assert any("callback" in op or "outfeed" in op for op in ops)
+    assert hloscan.has_input_output_alias(text)
+    assert not hloscan.has_input_output_alias("HloModule m\n")
+
+
+def test_hloscan_budget():
+    counts = {"all-reduce": 5, "all-gather": 2}
+    assert hloscan.over_budget(counts, {"all-reduce": 5,
+                                        "all-gather": 2}) == []
+    over = hloscan.over_budget(counts, {"all-reduce": 4})
+    ops = {op for op, _n, _cap in over}
+    assert ops == {"all-reduce", "all-gather"}  # absent op allowed 0
+    assert hloscan.over_budget(counts, {"all-reduce": "*",
+                                        "all-gather": -1}) == []
+
+
+# ---------------------------------------------------------------------------
+# cell auditor end-to-end on tiny cells
+# ---------------------------------------------------------------------------
+
+
+def _cell(fn, **meta):
+    from repro.obs import jaxprobe
+
+    return jaxprobe.CellInfo(name="t.cell", fn=fn, **meta)
+
+
+def test_audit_clean_cell():
+    info = _cell(jax.jit(lambda x: x * 2))
+    info.call_avals = ((jax.ShapeDtypeStruct((4,), jnp.float32),), {})
+    audit = cellaudit.audit_cell(info)
+    assert audit.violations == [], audit.violations
+
+
+def test_audit_never_called_cell():
+    audit = cellaudit.audit_cell(_cell(jax.jit(lambda x: x)))
+    assert len(audit.violations) == 1
+    assert "never called" in audit.violations[0]
+
+
+def test_audit_flags_callback():
+    def f(x):
+        jax.debug.callback(lambda v: None, x)
+        return x + 1
+
+    info = _cell(jax.jit(f))
+    info.call_avals = ((jax.ShapeDtypeStruct((2,), jnp.float32),), {})
+    audit = cellaudit.audit_cell(info)
+    assert any("callback" in v for v in audit.violations), audit.violations
+
+
+def test_audit_flags_budget_blowup(monkeypatch):
+    info = _cell(jax.jit(lambda x: x + 1), budget={"all-reduce": 0})
+    info.call_avals = ((jax.ShapeDtypeStruct((2,), jnp.float32),), {})
+    clean = cellaudit.audit_cell(info)
+    assert clean.violations == []  # no collectives at all: within budget
+
+    # a single-device host can't lower a real collective, so inject the
+    # inventory a sharded lowering would produce and assert the audit
+    # turns it into a budget violation (the real path fires in the
+    # decode benchmark's 4x2 prefill cell)
+    monkeypatch.setattr(
+        cellaudit.hloscan, "collective_counts",
+        lambda text: {"all-reduce": 3, "all-to-all": 1},
+    )
+    audit = cellaudit.audit_cell(info)
+    assert len(audit.violations) == 2, audit.violations
+    assert all("collective budget exceeded" in v
+               for v in audit.violations)
+    assert audit.collectives == {"all-reduce": 3, "all-to-all": 1}
+
+    # unbudgeted cells record the inventory but never gate on it
+    info.budget = None
+    audit = cellaudit.audit_cell(info)
+    assert audit.violations == []
+
+
+def test_audit_flags_dropped_donation():
+    # donating an argument the output cannot alias (dtype widens) makes
+    # XLA warn and drop the donation -> audit violation
+    info = _cell(
+        jax.jit(lambda x: (x.astype(jnp.float32), 0),
+                donate_argnums=(0,)),
+        donate=(0,),
+    )
+    info.call_avals = ((jax.ShapeDtypeStruct((8,), jnp.int8),), {})
+    audit = cellaudit.audit_cell(info)
+    assert any("donat" in v.lower() for v in audit.violations), (
+        audit.violations
+    )
+
+
+def test_audit_section_shape():
+    info = _cell(jax.jit(lambda x: x * 2))
+    info.call_avals = ((jax.ShapeDtypeStruct((4,), jnp.float32),), {})
+    sec = cellaudit.audit_section({"t.cell": info})
+    assert sec["n_cells"] == 1
+    assert sec["violations_total"] == 0
+    assert set(sec["cells"]) == {"t.cell"}
+    assert set(sec["cells"]["t.cell"]) == {
+        "violations", "collectives", "donation_aliased",
+    }
+
+
+def test_tracked_cell_captures_avals_and_delegates():
+    from repro import obs
+
+    obs.configure(enabled=True)
+    try:
+        tel = obs.get()
+        cell = tel.probe.track("t.capture", jax.jit(lambda x: x + 1))
+        out = cell(jnp.ones((3,), jnp.float32))
+        assert float(out.sum()) == 6.0
+        cells = tel.probe.cells()
+        assert "t.capture" in cells
+        (args, kwargs) = cells["t.capture"].call_avals
+        assert kwargs == {}
+        assert args[0].shape == (3,) and args[0].dtype == jnp.float32
+        audit = cellaudit.audit_cell(cells["t.capture"])
+        assert audit.violations == []
+    finally:
+        obs.reset()

@@ -390,10 +390,15 @@ def test_multipod_loss_decreases_all_modes():
         )
         state = fresh_state()
         losses = []
-        for i in range(12):
+        for i in range(24):
             state, m = py_step(state, stream.batch_at(i))
             losses.append(float(m["loss"]))
-        assert losses[-1] < losses[0], (scheme, compress, losses)
+        # tiny (8, 16) batches make single-step losses ±0.2 noisy, so
+        # compare 6-step window means (the trend, which is the claim)
+        # rather than two individual samples
+        first = sum(losses[:6]) / 6
+        last = sum(losses[-6:]) / 6
+        assert last < first - 0.05, (scheme, compress, losses)
 
 
 def test_multipod_requires_pod_axis():
